@@ -1,0 +1,134 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts in experiments/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+ARCH_ORDER = [
+    "dbrx-132b", "phi3-mini-3.8b", "whisper-base", "deepseek-v2-236b",
+    "recurrentgemma-9b", "internvl2-1b", "gemma2-27b", "nemotron-4-15b",
+    "mamba2-370m", "llama3.2-1b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def _fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load(dir_):
+    recs = {}
+    for path in glob.glob(os.path.join(dir_, "*.json")):
+        d = json.load(open(path))
+        key = (d["arch"], d["shape"], d["mesh"], d.get("step_impl", ""))
+        recs[key] = d
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    print(f"\n### Mesh {mesh}\n")
+    print("| arch | shape | compile | args GiB/dev | temp GiB/dev | "
+          "flops/dev | AR | AG | RS | A2A | CP |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for key, d in recs.items():
+                if key[0] == arch and key[1] == shape and key[2] == mesh \
+                        and "accum" not in key[3]:
+                    c = d["collectives"]
+                    print(f"| {arch} | {shape} | {d['compile_s']}s "
+                          f"| {_fmt_bytes(d['memory']['argument_size_in_bytes'])} "
+                          f"| {_fmt_bytes(d['memory']['temp_size_in_bytes'])} "
+                          f"| {d['roofline']['flops']:.3g} "
+                          f"| {c['all-reduce']['count']} "
+                          f"| {c['all-gather']['count']} "
+                          f"| {c['reduce-scatter']['count']} "
+                          f"| {c['all-to-all']['count']} "
+                          f"| {c['collective-permute']['count']} |")
+
+
+def roofline_table(recs):
+    print("\n| arch | shape | compute | memory | collective | bottleneck "
+          "| MODEL_FLOPS/dev | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for key, d in recs.items():
+                if key[0] == arch and key[1] == shape and key[2] == "16x16" \
+                        and "accum" not in key[3]:
+                    rl = d["roofline"]
+                    print(f"| {arch} | {shape} | {_fmt_s(rl['compute_s'])} "
+                          f"| {_fmt_s(rl['memory_s'])} "
+                          f"| {_fmt_s(rl['collective_s'])} "
+                          f"| **{rl['bottleneck']}** "
+                          f"| {rl['model_flops']:.3g} "
+                          f"| {rl['useful_ratio']:.2f} |")
+
+
+def compare_table(base, opt):
+    """Baseline vs optimized dominant-term deltas (single-pod)."""
+    print("\n| arch | shape | bottleneck | base dominant | opt dominant | delta |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            kb = next((d for k, d in base.items()
+                       if k[:3] == (arch, shape, "16x16")), None)
+            ko = next((d for k, d in opt.items()
+                       if k[:3] == (arch, shape, "16x16")), None)
+            if not kb or not ko:
+                continue
+            rb, ro = kb["roofline"], ko["roofline"]
+            dom = rb["bottleneck"]
+            b = rb[f"{dom}_s"]
+            o = ro[f"{dom}_s"]
+            delta = (o - b) / b * 100 if b else 0.0
+            print(f"| {arch} | {shape} | {dom} | {_fmt_s(b)} | {_fmt_s(o)} "
+                  f"| {delta:+.1f}% |")
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--compare", default=None,
+                   help="second artifact dir; emit baseline-vs-optimized deltas")
+    p.add_argument("--section", default="all", choices=("all", "dryrun", "roofline"))
+    args = p.parse_args(argv)
+    recs = load(args.dir)
+    print(f"{len(recs)} artifacts loaded")
+    if args.compare:
+        opt = load(args.compare)
+        print(f"{len(opt)} optimized artifacts loaded")
+        compare_table(recs, opt)
+        return
+    if args.section in ("all", "dryrun"):
+        print("\n## §Dry-run")
+        dryrun_table(recs, "16x16")
+        dryrun_table(recs, "2x16x16")
+    if args.section in ("all", "roofline"):
+        print("\n## §Roofline (single-pod 16x16, per device)")
+        roofline_table(recs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Quickstart: pretrain a tiny Llama with the adaptive batch-size schedule.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Watch the `bsz` column: the norm test (Algorithm 1) grows the global batch
+as training progresses — small batches early (cheap, high gradient noise
+tolerated), large batches late (efficient, noise must shrink).
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.launch.train import TrainJob, run_training, summarize
+
+job = TrainJob(
+    arch="llama3.2-1b",          # smoke-sized variant of the config
+    smoke=True,
+    schedule="adaptive",          # the paper's contribution
+    eta=0.12,                     # gradient-noise tolerance (paper: 0.05-0.3)
+    step_impl="accum_norm",       # single-device friendly estimator
+    steps=60, seq_len=64,
+    base_global_batch=4, max_global_batch=64,
+    base_micro_batch=2, max_micro_batch=4, base_accum=2,
+    eval_every=20,
+)
+hist = run_training(job)
+
+print(f"{'step':>5} {'bsz':>5} {'loss':>8} {'T_k':>8}")
+for i in range(0, len(hist["step"]), 5):
+    print(f"{hist['step'][i]:>5} {hist['global_batch'][i]:>5} "
+          f"{hist['loss'][i]:>8.4f} {hist['T'][i]:>8.1f}")
+print("\nsummary:", summarize(hist))

@@ -1,0 +1,67 @@
+"""Checkpointing: pytree <-> npz with step metadata and atomic writes.
+
+Host-based (gathers to host then writes); fine for the CPU container and the
+paper's model sizes.  The tree is flattened to path-keyed arrays so restore
+does not depend on Python object identity.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata: dict | None = None):
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    os.close(fd)
+    np.savez(tmp, **flat)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    meta = {"step": step, **(metadata or {})}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f, indent=2, default=str)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(directory)
+             if f.startswith("ckpt_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like_tree):
+    """Restore into the structure of `like_tree` (shape/dtype validated)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    flat_like = _flatten_with_paths(like_tree)
+    restored_flat = {}
+    for key, like in flat_like.items():
+        arr = data[key]
+        assert arr.shape == like.shape, (key, arr.shape, like.shape)
+        restored_flat[key] = arr.astype(like.dtype)
+    # rebuild in tree order
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    for path, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        leaves.append(restored_flat[key])
+    meta_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+    metadata = json.load(open(meta_path)) if os.path.exists(meta_path) else {}
+    return jax.tree_util.tree_unflatten(treedef, leaves), metadata

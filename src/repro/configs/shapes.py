@@ -1,0 +1,97 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+The FULL configs are exercised only through these specs (no allocation);
+smoke tests instantiate reduced variants.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as tfm
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+_i32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _frontend_specs(cfg: ModelConfig, batch: int, seq: int):
+    """Stub-frontend embeddings + adjusted text length (see DESIGN §4)."""
+    extra = {}
+    text_len = seq
+    if cfg.frontend.kind == "vision_stub":
+        np_ = cfg.frontend.num_prefix_tokens
+        extra["patch_embeds"] = _sds((batch, np_, cfg.d_model), cfg.act_dtype)
+        text_len = seq - np_
+    elif cfg.frontend.kind == "audio_stub":
+        extra["frames"] = _sds((batch, cfg.encoder.num_frames, cfg.d_model), cfg.act_dtype)
+    return extra, text_len
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, accum: int = 1):
+    """Stacked microbatches partitioning the global batch:
+    (M, global_batch/M, seq) token/label specs."""
+    assert shape.global_batch % accum == 0, (shape, accum)
+    b, s = shape.global_batch // accum, shape.seq_len
+    extra, text_len = _frontend_specs(cfg, b, s)
+    batch = {
+        "tokens": _sds((accum, b, text_len), _i32),
+        "labels": _sds((accum, b, text_len), _i32),
+    }
+    for k, v in extra.items():
+        batch[k] = _sds((accum,) + v.shape, v.dtype)
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    extra, text_len = _frontend_specs(cfg, b, s)
+    batch = {"tokens": _sds((b, text_len), _i32)}
+    batch.update(extra)
+    return batch
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape):
+    """(tokens, pos, cache) specs for one decode step with a seq_len cache."""
+    b, s = shape.global_batch, shape.seq_len
+    ring = (shape.name == "long_500k") and not cfg.native_subquadratic
+    cache = jax.eval_shape(
+        functools.partial(tfm.init_decode_cache, cfg, b, s, ring=ring))
+    return {
+        "tokens": _sds((b,), _i32),
+        "pos": _sds((), _i32),
+        "cache": cache,
+        "ring": ring,
+    }
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, accum: int = 1):
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_inputs(cfg, shape, accum)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape)
+    return decode_inputs(cfg, shape)

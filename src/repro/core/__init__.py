@@ -1,0 +1,10 @@
+from repro.core.norm_test import (
+    per_sample_norm_test, worker_variance_stats,
+    paper_faithful_worker_variance, accum_variance_stats,
+    tree_sqnorm, tree_sqdiff,
+)
+from repro.core.schedule import BatchPlan, round_plan, ConstantSchedule, StagewiseSchedule
+from repro.core.controller import (
+    ControllerConfig, ControllerState, init_controller, controller_update,
+    norm_test_statistic,
+)

@@ -1,0 +1,95 @@
+"""Algorithm 1: the adaptive batch-size controller (host-side state machine).
+
+Consumes the (var_l1, grad_sqnorm) statistics produced on-device by
+`core.norm_test` and decides the next step's `BatchPlan`:
+
+    T_k = ‖Var̂‖₁ / (η² ‖g‖²)
+    if T_k > b_k:  b_{k+1} = ⌈T_k⌉  (rounded via `round_plan`, clamped)
+    else:          b_{k+1} = b_k
+
+Extras beyond Algorithm 1 (all off by default, recorded in DESIGN §7):
+  * test_interval > 1 — run the test every N steps (the paper mentions this
+    as the overhead-reduction knob; interval 1 is the paper's setting);
+  * EMA smoothing of T_k to de-noise single-step spikes;
+  * `monotonic` — never shrink the batch (the paper's test only grows; we
+    keep the flag explicit so ablations can allow shrinking).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+from repro.core.schedule import BatchPlan, round_plan
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    eta: float = 0.15
+    workers: int = 1
+    base_micro_batch: int = 4
+    max_micro_batch: int = 8
+    base_accum: int = 16
+    base_global_batch: int = 256
+    max_global_batch: int = 8192
+    test_interval: int = 1
+    ema: float = 0.0              # 0 = off (paper-faithful)
+    monotonic: bool = True
+
+
+@dataclass(frozen=True)
+class ControllerState:
+    plan: BatchPlan
+    step: int = 0
+    samples: int = 0
+    ema_stat: float = 0.0
+    last_T: float = 0.0
+    num_increases: int = 0
+    at_max: bool = False
+
+
+def init_controller(cfg: ControllerConfig) -> ControllerState:
+    plan = round_plan(cfg.base_global_batch, cfg.workers, cfg.base_micro_batch,
+                      cfg.max_micro_batch, cfg.base_accum, cfg.max_global_batch)
+    return ControllerState(plan=plan)
+
+
+def norm_test_statistic(var_l1: float, grad_sqnorm: float, eta: float) -> float:
+    return float(var_l1) / (eta**2 * float(grad_sqnorm) + 1e-30)
+
+
+def controller_update(cfg: ControllerConfig, state: ControllerState,
+                      var_l1: float, grad_sqnorm: float) -> ControllerState:
+    """One Algorithm-1 update after an optimizer step."""
+    new_samples = state.samples + state.plan.global_batch
+    step = state.step + 1
+
+    # max-batch shortcut: the paper stops testing once b_k == max
+    if state.at_max or (cfg.test_interval > 1 and step % cfg.test_interval != 0):
+        return replace(state, step=step, samples=new_samples)
+
+    t_raw = norm_test_statistic(var_l1, grad_sqnorm, cfg.eta)
+    if cfg.ema > 0:
+        ema = cfg.ema * state.ema_stat + (1 - cfg.ema) * t_raw \
+            if state.step > 0 else t_raw
+        t_eff = ema
+    else:
+        ema = t_raw
+        t_eff = t_raw
+
+    b_k = state.plan.global_batch
+    if t_eff > b_k:
+        desired = math.ceil(t_eff)
+        if cfg.monotonic:
+            desired = max(desired, b_k)
+        plan = round_plan(desired, cfg.workers, cfg.base_micro_batch,
+                          cfg.max_micro_batch, cfg.base_accum,
+                          cfg.max_global_batch)
+        increased = plan.global_batch > b_k
+        return ControllerState(
+            plan=plan, step=step, samples=new_samples, ema_stat=ema,
+            last_T=t_raw,
+            num_increases=state.num_increases + int(increased),
+            at_max=plan.global_batch >= cfg.max_global_batch)
+    return replace(state, step=step, samples=new_samples, ema_stat=ema,
+                   last_T=t_raw)

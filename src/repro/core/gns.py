@@ -1,0 +1,80 @@
+"""Gradient noise scale (McCandlish et al. 2018) from norm-test statistics.
+
+The paper's §5.4 conjectures a relation between the norm-test threshold η and
+the *critical batch size*.  The GNS B_simple = tr(Σ)/‖∇L‖² is exactly
+computable from the two scalars the norm test already produces:
+
+    ‖Var̂‖₁ = (1/J)Σ_j ‖g_j − g‖²  estimates  tr(Σ)/b_worker = tr(Σ)·J/b
+    ⇒  tr(Σ) ≈ var_l1 · b / J      and  B_simple = tr(Σ)/‖g‖².
+
+Algorithm 1's growth target is b_{k+1} = ‖Var̂‖₁/(η²‖g‖²) = B_simple/(η²·J/b)…
+collapsing the algebra:   b_{k+1} = B_simple / (η² · J) · (J/b) · b … i.e.
+
+    b_{k+1} · η² = B_simple · (J / b_k)        (per-worker form)
+
+so for J = b (per-sample workers) the norm test with threshold η grows the
+batch to exactly B_simple/η² — the norm test IS a thresholded
+gradient-noise-scale controller.  `examples/gns_tracking.py` demonstrates the
+relation empirically; the unbiased running estimator below matches
+McCandlish's two-scale trick using (b_small, b_big) = (b/J, b).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax.numpy as jnp
+
+
+def gns_from_norm_test(var_l1: float, grad_sqnorm: float, global_batch: int,
+                       workers: int) -> dict:
+    """Point estimates of tr(Σ) and B_simple from one step's statistics."""
+    tr_sigma = float(var_l1) * global_batch / max(workers, 1)
+    b_simple = tr_sigma / max(float(grad_sqnorm), 1e-30)
+    return {"tr_sigma": tr_sigma, "b_simple": b_simple}
+
+
+def unbiased_gns_pair(var_l1: float, grad_sqnorm: float, global_batch: int,
+                      workers: int) -> dict:
+    """McCandlish's unbiased two-batch-size estimator using the worker
+    minibatch (b_small = b/J, its mean-square-norm = ‖g‖² + var_l1) and the
+    global batch (b_big = b):
+
+        |G|² := (b_big·‖G_big‖² − b_small·‖G_small‖²)/(b_big − b_small)
+        S    := (‖G_small‖² − ‖G_big‖²)/(1/b_small − 1/b_big)
+        B_simple = S / |G|²
+    """
+    b_big = float(global_batch)
+    b_small = b_big / max(workers, 1)
+    if workers <= 1:
+        return {"g2": float(grad_sqnorm), "s": 0.0, "b_simple": 0.0}
+    gsmall_sq = float(grad_sqnorm) + float(var_l1)   # E‖g_j‖² = ‖g‖² + E‖g_j−g‖²
+    gbig_sq = float(grad_sqnorm)
+    g2 = (b_big * gbig_sq - b_small * gsmall_sq) / (b_big - b_small)
+    s = (gsmall_sq - gbig_sq) / (1.0 / b_small - 1.0 / b_big)
+    return {"g2": g2, "s": s, "b_simple": s / g2 if g2 > 0 else float("inf")}
+
+
+@dataclass(frozen=True)
+class GNSTracker:
+    """EMA-smoothed running GNS (McCandlish appendix A.1 recommends separate
+    EMAs of S and |G|² rather than of their ratio)."""
+    alpha: float = 0.9
+    s_ema: float = 0.0
+    g2_ema: float = 0.0
+    initialized: bool = False
+
+    def update(self, var_l1: float, grad_sqnorm: float, global_batch: int,
+               workers: int) -> "GNSTracker":
+        est = unbiased_gns_pair(var_l1, grad_sqnorm, global_batch, workers)
+        if not self.initialized:
+            return GNSTracker(self.alpha, est["s"], est["g2"], True)
+        a = self.alpha
+        return GNSTracker(self.alpha, a * self.s_ema + (1 - a) * est["s"],
+                          a * self.g2_ema + (1 - a) * est["g2"], True)
+
+    @property
+    def b_simple(self) -> float:
+        if not self.initialized or self.g2_ema <= 0:
+            return 0.0
+        return self.s_ema / self.g2_ema

@@ -1,0 +1,149 @@
+"""The paper's core contribution: the (approximate) norm test, eq. (3)/(5).
+
+Three estimators of the gradient-variance statistic ‖Var̂‖₁, all returning the
+pair (var_l1, grad_sqnorm) from which the controller computes
+T_k = var_l1 / (η² · grad_sqnorm)  and Algorithm 1's update b_{k+1} = ⌈T_k⌉:
+
+* `per_sample_norm_test`   — eq. (3): exact per-sample gradients via vmap
+                             (single-device / validation scale only; the paper
+                             explains why this is impractical at LLM scale).
+* `worker_variance_stats`  — eq. (5) DDP-/FSDP-Norm: variance of per-worker
+                             minibatch gradients.  Lives inside the shard_map
+                             manual region; collectives over the data axes.
+* `accum_variance_stats`   — beyond-paper ACCUM-NORM: variance across the M
+                             gradient-accumulation microbatch gradients, with
+                             a (M-1)/M Bessel-style correction mapping it onto
+                             the same per-minibatch scale as eq. (5).
+
+All reductions are float32 regardless of gradient dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_sqnorm(tree) -> jax.Array:
+    """Σ ‖x‖² over all leaves, in f32."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return functools.reduce(jnp.add, leaves, jnp.zeros((), jnp.float32))
+
+
+def tree_sqdiff(tree_a, tree_b) -> jax.Array:
+    """Σ ‖a − b‖² over all leaves, in f32 (reference impl; the Pallas
+    `sqdiff_norm` kernel fuses this on TPU)."""
+    la, lb = jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)
+    acc = jnp.zeros((), jnp.float32)
+    for a, b in zip(la, lb):
+        acc += jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
+    return acc
+
+
+# ------------------------------------------------------- eq. (3) exact ----
+
+def per_sample_norm_test(loss_fn, params, batch, eta: float):
+    """Vanilla norm test (eq. 3) with exact per-sample gradients via vmap.
+
+    loss_fn(params, single_example_batch) -> scalar.
+    Returns dict(stat T, var_l1, grad_sqnorm, batch_grad).
+    """
+    b = jax.tree.leaves(batch)[0].shape[0]
+
+    def one(example):
+        return jax.grad(loss_fn)(params, example)
+
+    per_sample = jax.vmap(one)(batch)                     # leaves: (b, ...)
+    mean_grad = jax.tree.map(lambda g: jnp.mean(g, axis=0), per_sample)
+    # ‖Var_i(∇ℓ_i)‖₁ = 1/(b-1) Σ_i ‖∇ℓ_i − ∇L_B‖²  (sum over coordinates)
+    def var_leaf(ps, m):
+        d = ps.astype(jnp.float32) - m.astype(jnp.float32)[None]
+        return jnp.sum(jnp.square(d)) / max(b - 1, 1)
+    var_l1 = functools.reduce(
+        jnp.add,
+        jax.tree.leaves(jax.tree.map(var_leaf, per_sample, mean_grad)),
+        jnp.zeros((), jnp.float32))
+    gsq = tree_sqnorm(mean_grad)
+    stat = var_l1 / b / (eta**2 * gsq + 1e-30)
+    return {"T": var_l1 / (eta**2 * gsq + 1e-30), "lhs_over_b": stat,
+            "var_l1": var_l1, "grad_sqnorm": gsq, "grad": mean_grad}
+
+
+# ------------------------------------------- eq. (5) DDP-/FSDP-Norm ----
+
+def worker_variance_stats(local_grad, mean_grad, data_axes, *, sqdiff_fn=None):
+    """Inside shard_map (manual over `data_axes`): per-worker statistic.
+
+    local_grad : this worker's minibatch gradient g_j (model-axis sharded ok)
+    mean_grad  : the pmean'd global gradient g
+    Returns (var_l1, grad_sqnorm): ‖Var̂‖₁ = (1/J)Σ_j‖g_j − g‖² and ‖g‖².
+
+    The local ‖g_j − g‖² is reduced to ONE f32 scalar before the collective —
+    the beyond-paper wire-cost optimization (8 bytes vs O(d); DESIGN §7.1).
+    """
+    sqdiff = sqdiff_fn or tree_sqdiff
+    local_sq = sqdiff(local_grad, mean_grad)              # scalar on this worker
+    var_l1 = jax.lax.pmean(local_sq, data_axes)           # (1/J) Σ_j ‖g_j − g‖²
+    gsq = tree_sqnorm(mean_grad)
+    return var_l1, gsq
+
+
+def paper_faithful_worker_variance(local_grad, mean_grad, data_axes):
+    """The paper's literal formulation: all-reduce the full (g_j − g)² vector
+    (eq. 5 computes Var̂ as a d-vector, then takes ‖·‖₁).  Mathematically
+    identical to `worker_variance_stats`; kept as the baseline for the §Perf
+    collective-bytes comparison."""
+    diff_sq = jax.tree.map(
+        lambda a, b: jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)),
+        local_grad, mean_grad)
+    var_vec = jax.tree.map(lambda v: jax.lax.pmean(v, data_axes), diff_sq)
+    var_l1 = tree_sqnorm(jax.tree.map(jnp.sqrt, var_vec))  # ‖Var̂‖₁ = Σ coords
+    gsq = tree_sqnorm(mean_grad)
+    return var_l1, gsq
+
+
+# --------------------------------------------- beyond-paper ACCUM-NORM ----
+
+def accum_variance_stats(micro_grads_sq_sum, mean_grad, num_micro: int,
+                         workers: int):
+    """Estimate the per-*minibatch* gradient variance from the M accumulation
+    microbatch gradients (already data-axis averaged under GSPMD).
+
+    Var across microbatches: V_m = (1/(M-1)) (Σ_m‖ĝ^m‖² − M‖g‖²) estimates
+    tr Σ · M/(b/J · J) · ... — each microbatch has size b/M, so
+    V_m ≈ tr(Σ_ps)·M/b.  The paper's eq.(5) statistic targets tr(Σ_ps)·J/b
+    (per-worker minibatch size b/J), hence rescale by J/M.
+
+    micro_grads_sq_sum : Σ_m ‖ĝ^m‖² (f32 scalar accumulated in the scan)
+    mean_grad          : the averaged gradient g
+    """
+    gsq = tree_sqnorm(mean_grad)
+    if num_micro <= 1:
+        # single microbatch -> no within-step variance signal
+        return jnp.zeros((), jnp.float32), gsq
+    v_m = (micro_grads_sq_sum - num_micro * gsq) / (num_micro - 1)
+    v_m = jnp.maximum(v_m, 0.0)
+    var_l1 = v_m * (workers / num_micro)
+    return var_l1, gsq
+
+
+# ----------------------------------------------------- exact variance ----
+
+def exact_variance_test_holds(per_sample_grads, eta: float) -> jax.Array:
+    """The exact-variance norm test (eq. 4) on materialized per-sample grads —
+    used in unit tests to validate the estimators and Proposition 1's E-SG
+    bound."""
+    mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), per_sample_grads)
+    b = jax.tree.leaves(per_sample_grads)[0].shape[0]
+
+    def dev(ps, m):
+        d = ps.astype(jnp.float32) - m.astype(jnp.float32)[None]
+        return jnp.sum(jnp.square(d)) / b   # E‖g_B − ∇L‖² for b=1 draws / b
+    lhs = functools.reduce(
+        jnp.add, jax.tree.leaves(jax.tree.map(dev, per_sample_grads, mean)),
+        jnp.zeros((), jnp.float32)) / b
+    rhs = eta**2 * tree_sqnorm(mean)
+    return lhs <= rhs

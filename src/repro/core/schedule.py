@@ -1,0 +1,92 @@
+"""Batch-size schedules: constant, stagewise warmup (the paper's heuristic
+baseline, e.g. 2.5–2.5–95%), and the adaptive norm-test schedule (see
+controller.py).  All schedules speak the same `BatchPlan` vocabulary:
+global batch = workers (J) × accumulation steps (M) × per-worker microbatch.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class BatchPlan:
+    """A concrete, launchable batch configuration for one step."""
+    global_batch: int
+    micro_batch: int     # per-worker, per-accumulation-step sequences
+    accum_steps: int     # M
+    workers: int         # J
+
+    def __post_init__(self):
+        assert self.global_batch == self.workers * self.accum_steps * self.micro_batch, self
+
+
+def round_plan(desired_global: int, workers: int, micro_batch: int,
+               max_micro_batch: int, base_accum: int,
+               max_global: int, micro_buckets: bool = True) -> BatchPlan:
+    """Algorithm 1's rounding chain, adapted for shape-stable TPU steps.
+
+    The paper fixes M and grows the microbatch (b^M = ⌈b/(JM)⌉); under XLA a
+    microbatch-shape change recompiles, so we bucket the microbatch to powers
+    of two in [micro_batch, max_micro_batch] and let M absorb the remainder
+    (M is a host-side loop count — free to change).  The result satisfies
+    b_{k+1} = J·M·b^M ≥ desired, exactly as in Algorithm 1.
+    """
+    desired = max(1, min(desired_global, max_global))
+    # choose the microbatch bucket
+    ideal_micro = max(1, math.ceil(desired / (workers * base_accum)))
+    if micro_buckets:
+        mb = micro_batch
+        while mb * 2 <= max_micro_batch and mb * 2 <= ideal_micro:
+            mb *= 2
+    else:
+        mb = min(max(ideal_micro, micro_batch), max_micro_batch)
+    m = max(1, math.ceil(desired / (workers * mb)))
+    gb = workers * m * mb
+    if gb > max_global:
+        m = max(1, max_global // (workers * mb))
+        gb = workers * m * mb
+    return BatchPlan(global_batch=gb, micro_batch=mb, accum_steps=m, workers=workers)
+
+
+# ------------------------------------------------------------ schedules ----
+
+class ConstantSchedule:
+    """b_k = const (the paper's constant-batch baselines)."""
+
+    def __init__(self, plan: BatchPlan):
+        self.plan = plan
+
+    def plan_for(self, samples_processed: int, total_samples: int,
+                 stats=None) -> BatchPlan:
+        return self.plan
+
+
+class StagewiseSchedule:
+    """Prespecified warmup stages, e.g. 2048–4096–8192 for 2.5–2.5–95% of
+    training samples (paper §5.1 baseline mimicking Nemotron-4/GPT-3 ramps)."""
+
+    def __init__(self, stages: tuple[tuple[float, int], ...], workers: int,
+                 micro_batch: int, max_micro_batch: int, base_accum: int):
+        # stages: ((fraction_of_samples, global_batch), ...) fractions sum to 1
+        assert abs(sum(f for f, _ in stages) - 1.0) < 1e-6
+        self.stages = stages
+        self.workers = workers
+        self.micro_batch = micro_batch
+        self.max_micro_batch = max_micro_batch
+        self.base_accum = base_accum
+
+    def plan_for(self, samples_processed: int, total_samples: int,
+                 stats=None) -> BatchPlan:
+        frac = samples_processed / max(total_samples, 1)
+        acc = 0.0
+        batch = self.stages[-1][1]
+        for f, b in self.stages:
+            acc += f
+            if frac < acc:
+                batch = b
+                break
+        return round_plan(batch, self.workers, self.micro_batch,
+                          self.max_micro_batch, self.base_accum,
+                          max_global=batch, micro_buckets=True)

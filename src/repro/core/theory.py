@@ -1,0 +1,71 @@
+"""Testable consequences of the paper's convergence theory (§4, Appendix B).
+
+The paper proves convergence of Adam under the *coordinate-wise exact
+variance norm test* (Proposition 1 ⇒ coordinate-wise E-SG), with a
+feasibility condition on (β₁, β₂).  We do not re-prove; we implement the
+checkable pieces:
+
+* `coordinate_norm_test_holds` — the coordinate-wise exact-variance test on
+  materialized per-sample gradients (eq. in Prop. 1's premise);
+* `esg_constant` — the empirical coordinate-wise E-SG constant
+  max_i E[(∂_i L_B)²] / (∂_i L)², which Prop. 1 bounds by 1+η²;
+* `adam_beta_condition` — Theorem 1's sufficient condition
+  0 < β₁ ≤ √β₂ − 8(1+η²)(1−β₂)/β₂².  NOTE (recorded in DESIGN): with the
+  paper's own training hyperparameters (β₁, β₂) = (0.9, 0.95) and any η,
+  the sufficient condition is violated (√0.95 − 8(1+η²)·0.05/0.9025 ≈
+  0.53 − 0.44η² < 0.9) — the theorem's constants are conservative relative
+  to practice, as is typical for Adam analyses; training remains stable.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def per_coordinate_stats(per_sample_grads):
+    """per_sample_grads: pytree with leading sample axis.
+    Returns (mean_grad, second_moment_of_batchmean_estimate) flattened."""
+    flat = jnp.concatenate([
+        g.reshape(g.shape[0], -1).astype(jnp.float32)
+        for g in jax.tree.leaves(per_sample_grads)], axis=1)       # (n, d)
+    mean = jnp.mean(flat, axis=0)
+    var = jnp.var(flat, axis=0, ddof=1)
+    return mean, var
+
+
+def coordinate_norm_test_holds(per_sample_grads, eta: float, batch_size: int):
+    """Coordinate-wise exact-variance norm test: for every coordinate i,
+    E[(∂_i L_B − ∂_i L)²] = Var_i / b ≤ η² (∂_i L)²."""
+    mean, var = per_coordinate_stats(per_sample_grads)
+    lhs = var / batch_size
+    rhs = eta**2 * jnp.square(mean)
+    return jnp.all(lhs <= rhs + 1e-12)
+
+
+def esg_constant(per_sample_grads, batch_size: int):
+    """Empirical coordinate-wise E-SG constant:
+    max_i E[(∂_i L_B)²] / (∂_i L)²  (Prop. 1: ≤ 1+η² under the test)."""
+    mean, var = per_coordinate_stats(per_sample_grads)
+    second = jnp.square(mean) + var / batch_size
+    denom = jnp.square(mean)
+    ratio = jnp.where(denom > 1e-20, second / jnp.maximum(denom, 1e-20), 1.0)
+    return jnp.max(ratio)
+
+
+def adam_beta_condition(beta1: float, beta2: float, eta: float) -> dict:
+    """Theorem 1's sufficient condition on (β₁, β₂): returns the bound and
+    whether it holds."""
+    bound = math.sqrt(beta2) - 8.0 * (1.0 + eta**2) * (1.0 - beta2) / beta2**2
+    return {"beta1_bound": bound, "holds": 0.0 < beta1 <= bound}
+
+
+def minimal_batch_for_coordinate_test(per_sample_grads, eta: float) -> jax.Array:
+    """Smallest b such that the coordinate-wise exact-variance test holds
+    (the quantity Algorithm 1 implicitly targets): b* = max_i Var_i/(η²·g_i²)."""
+    mean, var = per_coordinate_stats(per_sample_grads)
+    denom = eta**2 * jnp.square(mean)
+    b = jnp.where(denom > 1e-20, var / jnp.maximum(denom, 1e-20), 0.0)
+    return jnp.ceil(jnp.max(b))

@@ -1,0 +1,192 @@
+"""Parameter / optimizer-state / cache PartitionSpec assignment.
+
+Specs are derived from leaf *path names* (wq, w_gate, table, ...) with a
+divisibility sanitizer: an axis assignment that does not evenly divide the
+dimension is dropped (e.g. internvl2's 14 heads or whisper's 51865 vocab on a
+16-wide model axis fall back to replication for that dim).  Leaves under the
+scanned "blocks" subtree automatically get a leading None for the repeat axis.
+
+Two layouts:
+  * fsdp=False — paper-faithful FSDP-Norm: tensor dims over `model` only
+    (params replicated across the data axes; the norm test owns those axes).
+  * fsdp=True  — beyond-paper ACCUM-NORM: additionally shard a non-TP dim
+    over the data axes (full-mesh ZeRO-3-style sharding).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+MODEL = "model"
+
+# name -> preferred axes per dim (without leading scan axis).
+# "F" marks the dim that takes the fsdp axes when fsdp=True.
+_TABLE = {
+    # embeddings
+    "table": ("VOCAB_OR_F", None),
+    # attention (d, H, hd) / (H, hd, d)
+    "wq": ("F", MODEL, None),
+    "wk": ("F", MODEL, None),
+    "wv": ("F", MODEL, None),
+    "wo": (MODEL, None, "F"),
+    # MLA
+    "w_dq": ("F", None),
+    "w_uq": ("F", MODEL, None),
+    "w_dkv": ("F", None),
+    "w_krope": ("F", None),
+    "w_uk": ("F", MODEL, None),
+    "w_uv": ("F", MODEL, None),
+    "w_o": (MODEL, None, "F"),
+    # dense mlp
+    "w_gate": ("F", MODEL),
+    "w_up": ("F", MODEL),
+    "w_down": (MODEL, "F"),
+    # moe (router (d,E); experts (E,d,f)/(E,f,d))
+    "router": ("F", None),
+    # rglru
+    "w_branch_a": ("F", MODEL),
+    "w_branch_b": ("F", MODEL),
+    "w_rg": ("F", MODEL),
+    "w_ig": ("F", MODEL),
+    "w_out": (MODEL, "F"),
+    "conv_w": (None, MODEL),
+    # ssd
+    "w_in": ("F", MODEL),
+}
+
+# MoE expert tensors are 3-D with names shared with dense mlp; disambiguate by rank.
+_MOE_TABLE = {
+    "w_gate": (MODEL, "F", None),
+    "w_up": (MODEL, "F", None),
+    "w_down": (MODEL, "F", None),
+}
+
+
+def _sanitize(spec_axes, shape, mesh):
+    out = []
+    for dim, axes in zip(shape, spec_axes):
+        if axes is None:
+            out.append(None)
+            continue
+        axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = 1
+        ok = True
+        for a in axes_t:
+            if a not in mesh.shape:
+                ok = False
+                break
+            size *= mesh.shape[a]
+        if ok and dim % size == 0 and size > 1:
+            out.append(axes if len(axes_t) > 1 else axes_t[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _leaf_spec(path_key: str, shape, mesh, fsdp_axes):
+    name = path_key.split("/")[-1]
+    in_scan = path_key.startswith("blocks/") or "/blocks/" in path_key
+    ndim = len(shape) - (1 if in_scan else 0)
+
+    axes = None
+    if name in _MOE_TABLE and ndim == 3 and name in ("w_gate", "w_up", "w_down"):
+        # expert tensors (E, d, f); dense mlp tensors are 2-D
+        axes = _MOE_TABLE[name]
+    elif name in _TABLE and len(_TABLE[name]) == ndim:
+        axes = _TABLE[name]
+
+    if axes is None:
+        spec_axes = [None] * ndim
+    else:
+        spec_axes = []
+        for a in axes:
+            if a == "F":
+                spec_axes.append(fsdp_axes if fsdp_axes else None)
+            elif a == "VOCAB_OR_F":
+                spec_axes.append(MODEL if not fsdp_axes else fsdp_axes)
+            else:
+                spec_axes.append(a)
+    if in_scan:
+        spec_axes = [None] + list(spec_axes)
+    return _sanitize(spec_axes, shape, mesh)
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspecs(params, mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree matching `params`."""
+    fsdp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data")) if fsdp else ()
+
+    def leaf(path, x):
+        return _leaf_spec(_path_key(path), x.shape, mesh, fsdp_axes)
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+def opt_pspecs(opt_state, param_specs):
+    """Optimizer moments share the parameter layout; count is replicated."""
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "count": P(),
+    }
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+# ----------------------------------------------------------- cache specs ----
+
+def cache_pspecs(cache, mesh, batch_divisible: bool):
+    """Decode caches: batch over the data axes (when divisible), kv-heads /
+    latent dims over `model` when divisible."""
+    daxes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+
+    def leaf(path, x):
+        key = _path_key(path)
+        name = key.split("/")[-1]
+        in_scan = "scanned" in key
+        ndim = len(x.shape) - (1 if in_scan else 0)
+        batch_dim_size = x.shape[1] if in_scan else x.shape[0]
+        baxes = daxes if (batch_divisible and batch_dim_size % dsize == 0) else None
+        msize = mesh.shape.get(MODEL, 1)
+        if name in ("k", "v") and ndim == 4:        # (b, s, kv, hd)
+            # §Perf-3: prefer kv-head sharding when it divides the model
+            # axis; otherwise sequence-shard LONG caches (the cache would
+            # replicate 16x and dominate HBM — dbrx/llama/nemotron).  Short
+            # ring caches stay replicated: the dus-on-sharded-dim overhead
+            # outweighs sharding a few MB (phi3/gemma2 regression data in
+            # EXPERIMENTS §Perf-3).
+            kv_dim = x.shape[-2]
+            s_dim = x.shape[-3]
+            if kv_dim % msize == 0 and msize > 1:
+                axes = [baxes, None, MODEL, None]
+            elif s_dim >= 8192:
+                axes = [baxes, MODEL, None, None]
+            else:
+                axes = [baxes, None, None, None]
+        elif name == "c_kv" and ndim == 3:           # (b, s, r)
+            axes = [baxes, MODEL if x.shape[-2] >= 8192 else None, None]
+        elif name == "k_rope" and ndim == 3:
+            axes = [baxes, MODEL if x.shape[-2] >= 8192 else None, None]
+        elif name == "ssm" and ndim == 4:            # (b, nh, n, p)
+            axes = [baxes, MODEL, None, None]
+        elif name == "conv" and ndim == 3:           # (b, k, c)
+            axes = [baxes, None, MODEL]
+        elif name == "h" and ndim == 2:              # rglru state (b, w)
+            axes = [baxes, MODEL]
+        else:
+            axes = [baxes] + [None] * (ndim - 1)
+        if in_scan:
+            axes = [None] + axes
+        return _sanitize(axes, x.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)

@@ -1,0 +1,83 @@
+"""Serving steps under GSPMD: prefill (full-sequence forward producing the KV
+cache) and decode (one token against the cache).  These are what the
+decode_32k / long_500k dry-run shapes lower."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.distributed.params import param_pspecs, cache_pspecs
+from repro.distributed.sharding import (
+    DEFAULT_RULES, MULTIPOD_RULES, ShardingRules, use_sharding_rules)
+from repro.launch.mesh import data_axes, num_workers
+
+
+def _serve_rules(mesh, batch: int) -> ShardingRules:
+    base = MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+    if batch % num_workers(mesh) != 0:
+        # batch not shardable over the data axes (long_500k b=1): replicate it
+        return ShardingRules(rules={**base.rules, "batch": None})
+    return base
+
+
+def make_decode_step(model, mesh, *, batch: int, ring: bool = False,
+                     params_like=None, jit: bool = True):
+    rules = _serve_rules(mesh, batch)
+    daxes = data_axes(mesh)
+    batch_ok = batch % num_workers(mesh) == 0
+
+    def step(params, cache, tokens, pos):
+        with use_sharding_rules(rules, mesh):
+            logits, new_cache = model.decode_step(params, cache, tokens, pos,
+                                                  ring=ring)
+        return logits, new_cache
+
+    if params_like is None:
+        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_pspecs(params_like, mesh, fsdp=False)
+
+    def wrap(cache_like):
+        if not jit:
+            return step
+        c_specs = cache_pspecs(cache_like, mesh, batch_divisible=batch_ok)
+        tok_sharding = NamedSharding(mesh, P(daxes) if batch_ok else P())
+        return jax.jit(
+            step,
+            in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                tok_sharding, None),
+            donate_argnums=(1,))
+
+    return wrap, p_specs
+
+
+def make_prefill(model, mesh, *, batch: int, params_like=None, jit: bool = True):
+    rules = _serve_rules(mesh, batch)
+    daxes = data_axes(mesh)
+    batch_ok = batch % num_workers(mesh) == 0
+
+    def run(params, batch_inputs):
+        with use_sharding_rules(rules, mesh):
+            return model.prefill(params, batch_inputs)
+
+    if params_like is None:
+        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_pspecs(params_like, mesh, fsdp=False)
+
+    def wrap(batch_like):
+        if not jit:
+            return run
+        b_shardings = jax.tree.map(
+            lambda x: NamedSharding(mesh, P(daxes) if batch_ok else P())
+            if x.ndim >= 1 else NamedSharding(mesh, P()), batch_like)
+        return jax.jit(run, in_shardings=(
+            jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                         is_leaf=lambda s: isinstance(s, P)),
+            b_shardings))
+
+    return wrap, p_specs

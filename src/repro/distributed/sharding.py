@@ -1,0 +1,153 @@
+"""Logical-axis sharding rules (MaxText-style) for all model code.
+
+Model code annotates activations/params with *logical* axis names
+("batch", "heads", "ffn", ...).  A `ShardingRules` mapping translates those to
+physical mesh axes.  Outside a mesh context (CPU smoke tests) everything is a
+no-op, so the same model code runs on 1 host device and on the 512-device
+dry-run mesh unchanged.
+
+Two execution modes share these rules:
+
+* GSPMD mode (serving, ACCUM-NORM training): "batch" maps to the data axes.
+* hybrid shard_map mode (FSDP-Norm training): the data axes are *manual*, so
+  "batch" must map to None inside the manual region — `manual_data_rules`
+  strips the data axes from the mapping while keeping "model"-axis rules
+  active for GSPMD auto-partitioning.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+MeshAxes = tuple[str, ...] | str | None
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Mapping from logical axis names to physical mesh axes."""
+
+    rules: dict[str, MeshAxes] = field(default_factory=dict)
+
+    def spec(self, logical_axes: tuple[str | None, ...]) -> P:
+        out = []
+        for name in logical_axes:
+            if name is None:
+                out.append(None)
+            else:
+                out.append(self.rules.get(name))
+        return P(*out)
+
+
+# The production layout: tensor/expert/vocab dims over the `model` axis,
+# batch over data axes; the fsdp axis for parameters is `model` (see DESIGN §2).
+DEFAULT_RULES = ShardingRules(
+    rules={
+        "batch": ("data",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ffn": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+        "embed": None,          # d_model replicated (activations)
+        "seq": None,
+        "kv_seq": None,
+        "act_seq": None,      # sequence parallelism (§Perf-1.5): off by default
+        "lru_width": ("model",),
+        "ssm_heads": ("model",),
+        "state": None,
+    }
+)
+
+MULTIPOD_RULES = ShardingRules(
+    rules={**DEFAULT_RULES.rules, "batch": ("pod", "data")}
+)
+
+def with_sequence_parallel(rules: ShardingRules) -> ShardingRules:
+    """Korthikanti-style sequence parallelism: residual-stream seq dim over
+    the model axis between TP regions (norms/residuals compute on 1/16)."""
+    return ShardingRules(rules={**rules.rules, "act_seq": ("model",)})
+
+# Full-mesh FSDP layout for the beyond-paper ACCUM-NORM variant: parameters'
+# large dims sharded over both axes.
+FULL_FSDP_RULES = ShardingRules(
+    rules={**DEFAULT_RULES.rules, "param_fsdp": ("data", "model")}
+)
+
+
+def manual_data_rules(rules: ShardingRules, manual_axes: tuple[str, ...]) -> ShardingRules:
+    """Strip `manual_axes` from every rule (for use inside shard_map manual regions)."""
+    new = {}
+    for name, axes in rules.rules.items():
+        if axes is None:
+            new[name] = None
+        elif isinstance(axes, str):
+            new[name] = None if axes in manual_axes else axes
+        else:
+            kept = tuple(a for a in axes if a not in manual_axes)
+            new[name] = kept if kept else None
+    return ShardingRules(rules=new)
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.rules: ShardingRules | None = None
+        self.mesh: jax.sharding.Mesh | None = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_sharding_rules(rules: ShardingRules | None, mesh: jax.sharding.Mesh | None = None):
+    prev_rules, prev_mesh = _CTX.rules, _CTX.mesh
+    _CTX.rules, _CTX.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _CTX.rules, _CTX.mesh = prev_rules, prev_mesh
+
+
+def current_rules() -> ShardingRules | None:
+    return _CTX.rules
+
+
+def logical_spec(*logical_axes: str | None) -> P:
+    rules = _CTX.rules
+    if rules is None:
+        return P(*([None] * len(logical_axes)))
+    return rules.spec(tuple(logical_axes))
+
+
+def maybe_shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """Apply a sharding constraint if rules are active; identity otherwise."""
+    rules = _CTX.rules
+    if rules is None:
+        return x
+    spec = rules.spec(tuple(logical_axes))
+    if all(s is None for s in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except ValueError:
+        # Outside of any mesh context (e.g. unit tests that set rules but no
+        # mesh) — constraint is advisory, skip it.
+        return x
+
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+    "FULL_FSDP_RULES",
+    "manual_data_rules",
+    "use_sharding_rules",
+    "current_rules",
+    "logical_spec",
+    "maybe_shard",
+]

@@ -1,0 +1,194 @@
+"""Distributed train steps.
+
+Two builders (DESIGN §2/§7):
+
+* `make_fsdp_norm_step` — the paper's DDP-/FSDP-Norm in its JAX-native form:
+  `shard_map` manual over the data axes (each manual instance is one of the
+  paper's J workers), GSPMD auto over the `model` axis (parameter sharding =
+  the FSDP/TP part).  The per-worker minibatch gradient g_j exists explicitly
+  before the `pmean`, exactly like the pre-all-reduce gradient in PyTorch
+  DDP/FSDP, and the eq.(5) statistic is computed from it.
+
+* `make_accum_norm_step` — beyond-paper ACCUM-NORM under pure GSPMD with
+  full-mesh FSDP parameter sharding: the variance statistic comes from the M
+  gradient-accumulation microbatch gradients, so no manual axes are needed
+  and parameters/moments shard over all 256/512 chips.
+
+Both take a stacked-microbatch batch {tokens/labels: (M, B_global, seq)} and
+perform: accumulate grads over M -> statistic -> AdamW -> metrics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+from repro.core.norm_test import (
+    worker_variance_stats, paper_faithful_worker_variance,
+    accum_variance_stats, tree_sqnorm)
+from repro.optim.adamw import AdamWConfig, init_adamw, adamw_update
+from repro.distributed.params import param_pspecs, opt_pspecs
+from repro.distributed.sharding import (
+    DEFAULT_RULES, MULTIPOD_RULES, manual_data_rules, use_sharding_rules,
+    with_sequence_parallel)
+from repro.launch.mesh import data_axes, num_workers
+
+
+def _tree_zeros_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _rules_for(mesh):
+    return MULTIPOD_RULES if "pod" in mesh.axis_names else DEFAULT_RULES
+
+
+def _batch_pspec(batch_tree, daxes):
+    """(M, B, ...) leaves: shard the global-batch dim over the data axes."""
+    return jax.tree.map(lambda x: P(None, daxes) if x.ndim >= 2 else P(), batch_tree)
+
+
+def _accumulate(model, params, batch, track_micro_sqnorm: bool):
+    """lax.scan over the M stacked microbatches; returns (mean grads g,
+    mean loss, mean aux, Σ_m ‖ĝ^m‖² if tracked)."""
+    m_steps = jax.tree.leaves(batch)[0].shape[0]
+
+    def loss_fn(p, mb):
+        loss, metrics = model.loss(p, mb)
+        return loss, metrics
+
+    def body(carry, mb):
+        acc_g, acc_loss, acc_aux, acc_sq = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+        sq = tree_sqnorm(g) if track_micro_sqnorm else acc_sq
+        return (acc_g, acc_loss + loss, acc_aux + metrics["aux"],
+                acc_sq + sq if track_micro_sqnorm else acc_sq), None
+
+    init = (_tree_zeros_f32(params), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    (acc_g, acc_loss, acc_aux, acc_sq), _ = jax.lax.scan(body, init, batch)
+    g = jax.tree.map(lambda x: x / m_steps, acc_g)
+    return g, acc_loss / m_steps, acc_aux / m_steps, acc_sq, m_steps
+
+
+# --------------------------------------------------------- FSDP-Norm ----
+
+def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
+                        variance_impl: str = "scalar",
+                        sequence_parallel: bool = False,
+                        params_like=None, jit: bool = True):
+    """variance_impl: 'scalar' (pre-reduced 8-byte collective, DESIGN §7.1)
+    or 'paper' (eq. 5 literal: all-reduce the full (g_j-g)² vector)."""
+    daxes = data_axes(mesh)
+    base = _rules_for(mesh)
+    if sequence_parallel:
+        base = with_sequence_parallel(base)
+    rules = manual_data_rules(base, daxes)
+
+    def inner(params, opt_state, batch, lr):
+        with use_sharding_rules(rules, mesh):
+            g_j, loss, aux, _, m_steps = _accumulate(model, params, batch, False)
+            g = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), g_j)
+            if variance_impl == "paper":
+                var_l1, gsq = paper_faithful_worker_variance(g_j, g, daxes)
+            else:
+                var_l1, gsq = worker_variance_stats(g_j, g, daxes)
+            loss = jax.lax.pmean(loss, daxes)
+            aux = jax.lax.pmean(aux, daxes)
+            new_params, new_opt, gnorm = adamw_update(params, g, opt_state, opt_cfg, lr)
+        metrics = {"loss": loss, "aux": aux, "var_l1": var_l1,
+                   "grad_sqnorm": gsq, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    if params_like is None:
+        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_pspecs(params_like, mesh, fsdp=False)
+    opt_like = jax.eval_shape(init_adamw, params_like)
+    o_specs = {"m": p_specs, "v": p_specs, "count": P()}
+
+    def batch_specs(batch_like):
+        return _batch_pspec(batch_like, daxes)
+
+    def wrap(batch_like):
+        sm = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), params_like),
+                      jax.tree.map(lambda _: P(), opt_like),
+                      batch_specs(batch_like), P()),
+            out_specs=(jax.tree.map(lambda _: P(), params_like),
+                       jax.tree.map(lambda _: P(), opt_like),
+                       {"loss": P(), "aux": P(), "var_l1": P(),
+                        "grad_sqnorm": P(), "grad_norm": P()}),
+            axis_names=set(daxes), check_vma=False)
+        if not jit:
+            return sm
+        return jax.jit(
+            sm,
+            in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             batch_specs(batch_like),
+                             is_leaf=lambda s: isinstance(s, P)),
+                None),
+            out_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                None),
+            donate_argnums=(0, 1))
+
+    return wrap, p_specs, o_specs
+
+
+# -------------------------------------------------------- ACCUM-NORM ----
+
+def make_accum_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
+                         params_like=None, jit: bool = True):
+    """Beyond-paper: pure-GSPMD step with full-mesh FSDP params; variance from
+    accumulation microbatches (requires M >= 2 for a signal)."""
+    daxes = data_axes(mesh)
+    rules = _rules_for(mesh)
+    J = num_workers(mesh)
+
+    def step(params, opt_state, batch, lr):
+        with use_sharding_rules(rules, mesh):
+            # constrain the batch over data axes (GSPMD)
+            batch = jax.tree.map(
+                lambda x: jax.lax.with_sharding_constraint(
+                    x, P(None, daxes)) if x.ndim >= 2 else x, batch)
+            g, loss, aux, sq_sum, m_steps = _accumulate(model, params, batch, True)
+            var_l1, gsq = accum_variance_stats(sq_sum, g, m_steps, J)
+            new_params, new_opt, gnorm = adamw_update(params, g, opt_state, opt_cfg, lr)
+        metrics = {"loss": loss, "aux": aux, "var_l1": var_l1,
+                   "grad_sqnorm": gsq, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    if params_like is None:
+        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_pspecs(params_like, mesh, fsdp=True)
+    o_specs = {"m": p_specs, "v": p_specs, "count": P()}
+
+    def wrap(batch_like):
+        if not jit:
+            return step
+        return jax.jit(
+            step,
+            in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), o_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                jax.tree.map(lambda x: NamedSharding(mesh, P(None, daxes))
+                             if x.ndim >= 2 else NamedSharding(mesh, P()),
+                             batch_like),
+                None),
+            donate_argnums=(0, 1))
+
+    return wrap, p_specs, o_specs

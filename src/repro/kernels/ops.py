@@ -1,0 +1,80 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret` defaults to True off-TPU (this container is CPU-only; the kernels
+target TPU and are validated against ref.py in interpret mode) and False on a
+real TPU backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.sqdiff_norm import sqdiff_norm as _sqdiff_norm
+from repro.kernels.fused_adamw import fused_adamw as _fused_adamw
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sqdiff_norm(x, y, interpret: bool | None = None):
+    ip = _default_interpret() if interpret is None else interpret
+    return _sqdiff_norm(x, y, interpret=ip)
+
+
+def sqdiff_norm_tree(tree_a, tree_b, interpret: bool | None = None):
+    """Fused Σ‖a−b‖² over a whole gradient pytree (norm-test statistic)."""
+    ip = _default_interpret() if interpret is None else interpret
+    total = jnp.zeros((), jnp.float32)
+    for a, b in zip(jax.tree.leaves(tree_a), jax.tree.leaves(tree_b)):
+        total += _sqdiff_norm(a, b, interpret=ip)
+    return total
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "beta1", "beta2", "eps", "weight_decay", "interpret"))
+def fused_adamw(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, c1, c2,
+                interpret: bool | None = None):
+    ip = _default_interpret() if interpret is None else interpret
+    return _fused_adamw(p, g, m, v, lr=lr, beta1=beta1, beta2=beta2, eps=eps,
+                        weight_decay=weight_decay, c1=c1, c2=c2, interpret=ip)
+
+
+def fused_adamw_tree(params, grads, m, v, *, lr, beta1, beta2, eps,
+                     weight_decay, c1, c2, interpret: bool | None = None):
+    ip = _default_interpret() if interpret is None else interpret
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = jax.tree.leaves(grads)
+    leaves_m = jax.tree.leaves(m)
+    leaves_v = jax.tree.leaves(v)
+    new_p, new_m, new_v = [], [], []
+    for p_, g_, m_, v_ in zip(leaves_p, leaves_g, leaves_m, leaves_v):
+        a, b, c = _fused_adamw(p_, g_, m_, v_, lr=lr, beta1=beta1, beta2=beta2,
+                               eps=eps, weight_decay=weight_decay, c1=c1,
+                               c2=c2, interpret=ip)
+        new_p.append(a); new_m.append(b); new_v.append(c)
+    unf = treedef.unflatten
+    return unf(new_p), unf(new_m), unf(new_v)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool | None = None):
+    ip = _default_interpret() if interpret is None else interpret
+    return _rmsnorm(x, scale, eps=eps, interpret=ip)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=256, block_kv=256, interpret: bool | None = None):
+    ip = _default_interpret() if interpret is None else interpret
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            softcap=softcap, block_q=block_q,
+                            block_kv=block_kv, interpret=ip)

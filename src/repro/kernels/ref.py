@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sqdiff_norm_ref(x, y):
+    """Σ (x − y)² in f32 (the norm-test reduction)."""
+    d = x.astype(jnp.float32) - y.astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def sqnorm_ref(x):
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def adamw_ref(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, c1, c2):
+    """One AdamW update on a flat tensor (bias-corrected, decoupled decay)."""
+    g32 = g.astype(jnp.float32)
+    m = beta1 * m + (1 - beta1) * g32
+    v = beta2 * v + (1 - beta2) * jnp.square(g32)
+    mhat = m / c1
+    vhat = v / c2
+    p32 = p.astype(jnp.float32)
+    p32 = (1.0 - lr * weight_decay) * p32 - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p32.astype(p.dtype), m, v
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 / jnp.sqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q,k,v: (b, t, h, d) (same head count — GQA expansion happens in the
+    wrapper).  Returns (b, t, h, d)."""
+    b, t, h, d = q.shape
+    s = k.shape[1]
+    logits = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -2.0e38)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", p, v.astype(jnp.float32)).astype(q.dtype)

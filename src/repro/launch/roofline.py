@@ -1,0 +1,136 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds (DESIGN / task spec):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = wire_bytes_per_device / ICI_link_bandwidth
+
+`cost_analysis()` of an SPMD-partitioned module reports the per-device
+program, so FLOPs/bytes are already per-chip.  Collective bytes are parsed
+from the optimized HLO text with per-op wire-cost factors (ring algorithms,
+(n−1)/n ≈ 1):
+
+    all-reduce          2 × result bytes   (reduce-scatter + all-gather)
+    all-gather          1 × result bytes
+    reduce-scatter      1 × operand bytes
+    all-to-all          1 × result bytes
+    collective-permute  1 × result bytes
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum wire bytes per collective kind from optimized HLO text."""
+    out = {op: {"count": 0, "result_bytes": 0, "operand_bytes": 0}
+           for op in _COLLECTIVE_OPS}
+    # lines look like:  %name = TYPE op-name(%arg, ...), channel_id=...
+    line_re = re.compile(
+        r"=\s+((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+        r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+        r"(?:-start)?\(([^)]*)\)")
+    for m in line_re.finditer(hlo_text):
+        result_type, op, args = m.group(1), m.group(2), m.group(3)
+        out[op]["count"] += 1
+        out[op]["result_bytes"] += _shape_bytes(result_type)
+        out[op]["operand_bytes"] += _shape_bytes(args)
+    return out
+
+
+def wire_bytes(collectives: dict) -> float:
+    b = 0.0
+    b += 2.0 * collectives["all-reduce"]["result_bytes"]
+    b += 1.0 * collectives["all-gather"]["result_bytes"]
+    b += 1.0 * collectives["reduce-scatter"]["operand_bytes"]
+    b += 1.0 * collectives["all-to-all"]["result_bytes"]
+    b += 1.0 * collectives["collective-permute"]["result_bytes"]
+    return b
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def roofline_terms(cost_analysis: dict, hlo_text: str,
+                   model_flops_per_device: float = 0.0) -> Roofline:
+    flops = float(cost_analysis.get("flops", 0.0))
+    hbm = float(cost_analysis.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    wb = wire_bytes(coll)
+    c = flops / PEAK_FLOPS
+    m = hbm / HBM_BW
+    k = wb / ICI_BW
+    terms = {"compute": c, "memory": m, "collective": k}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops_per_device / flops if flops > 0 else 0.0
+    return Roofline(flops=flops, hbm_bytes=hbm, wire_bytes=wb,
+                    compute_s=c, memory_s=m, collective_s=k,
+                    bottleneck=bottleneck,
+                    model_flops=model_flops_per_device, useful_ratio=useful)
+
+
+def model_flops_per_step(cfg, shape, n_devices: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per device.
+
+    For train: D = global_batch × seq tokens, factor 6 (fwd 2 + bwd 4).
+    For prefill: factor 2. For decode: one token per sequence, factor 2."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * n_active * tokens / n_devices

@@ -1,0 +1,83 @@
+"""Serving driver: batched prefill + decode loop (smoke-scale on CPU).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --batch 4 --prompt-len 32 --gen-len 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.distributed.serve_step import make_decode_step, make_prefill
+from repro.models import build_model
+
+
+def run_serving(arch: str, *, smoke=True, batch=4, prompt_len=32, gen_len=32,
+                mesh_data=1, mesh_model=1, seed=0, greedy=True):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(seed)
+    params = model.init(key)
+    mesh = make_host_mesh(data=mesh_data, model=mesh_model)
+
+    cache_len = prompt_len + gen_len
+    rng = np.random.default_rng(seed)
+    text_len = prompt_len - (cfg.frontend.num_prefix_tokens
+                             if cfg.frontend.kind == "vision_stub" else 0)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, text_len)).astype(np.int32)
+
+    dec_wrap, _ = make_decode_step(model, mesh, batch=batch)
+    cache = model.init_cache(batch, cache_len)
+    step_fn = dec_wrap(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache))
+
+    with jax.set_mesh(mesh):
+        # "prefill" by streaming the prompt through decode (cache stays
+        # shape-stable; production prefill uses model.prefill)
+        t0 = time.time()
+        tok = jnp.asarray(prompts[:, 0])
+        for i in range(text_len):
+            logits, cache = step_fn(params, cache, tok, jnp.int32(i))
+            tok = jnp.asarray(prompts[:, i + 1]) if i + 1 < text_len else (
+                jnp.argmax(logits, -1).astype(jnp.int32))
+        t_prefill = time.time() - t0
+
+        generated = [tok]
+        t0 = time.time()
+        for i in range(text_len, text_len + gen_len - 1):
+            logits, cache = step_fn(params, cache, tok, jnp.int32(i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            generated.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+
+    out = np.stack([np.asarray(t) for t in generated], axis=1)
+    toks_per_s = batch * gen_len / max(t_decode, 1e-9)
+    return {"tokens": out, "prefill_s": t_prefill, "decode_s": t_decode,
+            "decode_tok_per_s": toks_per_s}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama3.2-1b")
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=32)
+    p.add_argument("--gen-len", type=int, default=32)
+    args = p.parse_args(argv)
+    res = run_serving(args.arch, smoke=not args.full, batch=args.batch,
+                      prompt_len=args.prompt_len, gen_len=args.gen_len)
+    print(f"prefill {res['prefill_s']:.2f}s decode {res['decode_s']:.2f}s "
+          f"({res['decode_tok_per_s']:.1f} tok/s)")
+    print("sample:", res["tokens"][0][:16])
+
+
+if __name__ == "__main__":
+    main()

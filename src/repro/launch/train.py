@@ -1,0 +1,286 @@
+"""Training driver: adaptive / constant / stagewise batch-size pretraining.
+
+Usable as a library (`run_training(TrainJob(...))` — benchmarks and examples
+call this) and as a CLI:
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch microllama-300m --smoke --schedule adaptive --eta 0.2 \
+        --steps 200 --seq-len 128 --max-global-batch 256
+
+The loop is Algorithm 1: for each step the controller's BatchPlan determines
+the (M, J*micro, seq) stacked batch; the fused distributed step accumulates
+over M, runs the norm test collectives and the AdamW update; the host
+controller consumes (var_l1, grad_sqnorm) and emits the next plan.  A new
+(M, micro) pair compiles once and is cached.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.controller import (
+    ControllerConfig, init_controller, controller_update)
+from repro.core.schedule import BatchPlan, ConstantSchedule, StagewiseSchedule, round_plan
+from repro.data.pipeline import MarkovTokens, UniformTokens, make_batch
+from repro.distributed.train_step import make_fsdp_norm_step, make_accum_norm_step
+from repro.launch.mesh import make_host_mesh, num_workers
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig, init_adamw, warmup_cosine
+from repro.checkpoint.store import save_checkpoint
+
+
+@dataclass
+class TrainJob:
+    arch: str = "microllama-300m"
+    smoke: bool = True
+    schedule: str = "adaptive"            # adaptive | constant | stagewise
+    step_impl: str = "fsdp_norm"          # fsdp_norm | accum_norm
+    variance_impl: str = "scalar"         # scalar | paper
+    eta: float = 0.2
+    steps: int = 200
+    total_samples: int | None = None      # stop criterion (paper trains by samples)
+    seq_len: int = 128
+    base_global_batch: int = 16
+    max_global_batch: int = 256
+    base_micro_batch: int = 2
+    max_micro_batch: int = 4
+    base_accum: int = 2
+    test_interval: int = 1
+    ema: float = 0.0
+    stages: tuple = ((0.025, 16), (0.025, 64), (0.95, 256))
+    peak_lr: float = 4e-4
+    min_lr: float = 4e-5
+    warmup_frac: float = 0.01
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    data: str = "markov"                  # markov | uniform
+    data_seed: int = 0
+    seed: int = 0
+    mesh_data: int = 0                    # 0 => all devices on data axis
+    mesh_model: int = 1
+    # sequence-length warmup (paper §2; GrowLength/Llama-3 style): stages of
+    # (fraction_of_samples, seq_len); empty = constant job.seq_len
+    seq_stages: tuple = ()
+    eval_every: int = 25
+    eval_batches: int = 4
+    checkpoint_dir: str = ""
+    log_path: str = ""
+
+
+def _make_source(job: TrainJob, vocab: int):
+    if job.data == "markov":
+        return MarkovTokens(vocab_size=vocab, seed=job.data_seed)
+    return UniformTokens(vocab_size=vocab, seed=job.data_seed)
+
+
+def _sds(batch):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+
+
+def run_training(job: TrainJob) -> dict:
+    cfg = get_smoke_config(job.arch) if job.smoke else get_config(job.arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(job.seed)
+    params = model.init(key)
+    opt_state = init_adamw(params)
+
+    n_dev = len(jax.devices())
+    d = job.mesh_data or max(1, n_dev // job.mesh_model)
+    mesh = make_host_mesh(data=d, model=job.mesh_model)
+    workers = num_workers(mesh)
+
+    opt_cfg = AdamWConfig(lr=job.peak_lr, weight_decay=job.weight_decay,
+                          grad_clip=job.grad_clip)
+    if job.step_impl == "fsdp_norm":
+        wrap, _, _ = make_fsdp_norm_step(model, opt_cfg, mesh,
+                                         variance_impl=job.variance_impl,
+                                         params_like=params)
+    else:
+        wrap, _, _ = make_accum_norm_step(model, opt_cfg, mesh, params_like=params)
+
+    ctrl_cfg = ControllerConfig(
+        eta=job.eta, workers=workers,
+        base_micro_batch=job.base_micro_batch,
+        max_micro_batch=job.max_micro_batch, base_accum=job.base_accum,
+        base_global_batch=job.base_global_batch,
+        max_global_batch=job.max_global_batch,
+        test_interval=job.test_interval, ema=job.ema)
+    ctrl = init_controller(ctrl_cfg)
+
+    if job.schedule == "constant":
+        schedule = ConstantSchedule(round_plan(
+            job.base_global_batch, workers, job.base_micro_batch,
+            job.max_micro_batch, job.base_accum, job.base_global_batch))
+    elif job.schedule == "stagewise":
+        schedule = StagewiseSchedule(tuple(job.stages), workers,
+                                     job.base_micro_batch, job.max_micro_batch,
+                                     job.base_accum)
+    else:
+        schedule = None
+
+    total_samples = job.total_samples or job.steps * job.max_global_batch
+    # the paper schedules the lr in SAMPLES (Table 5: warmup 1% of training
+    # samples) — the only fair basis when batch sizes differ across schemes
+    warmup_samples = max(1, int(job.warmup_frac * total_samples))
+
+    source = _make_source(job, cfg.vocab_size)
+    # held-out evaluation: same distribution (same Markov chain), disjoint
+    # step-id stream => unseen sequences
+    val_source = source
+    VAL_STEP_BASE = 1_000_000_000
+
+    extra_specs = {}
+    if cfg.frontend.kind == "vision_stub":
+        extra_specs["patch_embeds"] = (cfg.frontend.num_prefix_tokens, cfg.d_model)
+    elif cfg.frontend.kind == "audio_stub":
+        extra_specs["frames"] = (cfg.encoder.num_frames, cfg.d_model)
+
+    compiled = {}
+    eval_fn = {}
+
+    def get_step(plan: BatchPlan, batch):
+        key_ = (plan.accum_steps, plan.micro_batch,
+                batch["tokens"].shape[-1])
+        if key_ not in compiled:
+            compiled[key_] = wrap(_sds(batch))
+        return compiled[key_]
+
+    def eval_loss(params, step):
+        bplan = BatchPlan(global_batch=workers * 2, micro_batch=2,
+                          accum_steps=1, workers=workers)
+        losses = []
+        for i in range(job.eval_batches):
+            vb = make_batch(val_source, VAL_STEP_BASE + i, bplan,
+                            job.seq_len, extra_specs)
+            vb = {k: jnp.asarray(v[0]) for k, v in vb.items()}
+            if "eval" not in eval_fn:
+                eval_fn["eval"] = jax.jit(lambda p, b: model.loss(p, b)[0])
+            losses.append(float(eval_fn["eval"](params, vb)))
+        return float(np.mean(losses))
+
+    history = {"step": [], "loss": [], "val_loss": [], "global_batch": [],
+               "T": [], "var_l1": [], "grad_sqnorm": [], "samples": [],
+               "time": []}
+    samples = 0
+    step = 0
+    t0 = time.time()
+    log_f = open(job.log_path, "w") if job.log_path else None
+    if log_f:
+        log_f.write("step,samples,global_batch,accum,micro,loss,val_loss,T,var_l1,grad_sqnorm,wall_s\n")
+
+    def seq_len_for(samples_done: int) -> int:
+        if not job.seq_stages:
+            return job.seq_len
+        frac = samples_done / max(total_samples, 1)
+        acc = 0.0
+        for f, sl in job.seq_stages:
+            acc += f
+            if frac < acc:
+                return sl
+        return job.seq_stages[-1][1]
+
+    with jax.set_mesh(mesh):
+        while samples < total_samples and step < job.steps:
+            if schedule is not None:
+                plan = schedule.plan_for(samples, total_samples)
+            else:
+                plan = ctrl.plan
+            seq_len = seq_len_for(samples)
+            batch_np = make_batch(source, step, plan, seq_len, extra_specs)
+            batch = jax.tree.map(jnp.asarray, batch_np)
+            lr = warmup_cosine(samples, peak_lr=job.peak_lr, min_lr=job.min_lr,
+                               warmup_steps=warmup_samples,
+                               total_steps=total_samples)
+            step_fn = get_step(plan, batch)
+            params, opt_state, metrics = step_fn(params, opt_state, batch, lr)
+
+            var_l1 = float(metrics["var_l1"])
+            gsq = float(metrics["grad_sqnorm"])
+            loss = float(metrics["loss"])
+            samples += plan.global_batch
+            step += 1
+            if job.schedule == "adaptive":
+                ctrl = controller_update(ctrl_cfg, ctrl, var_l1, gsq)
+
+            val = math.nan
+            if job.eval_every and (step % job.eval_every == 0 or step == job.steps):
+                val = eval_loss(params, step)
+
+            t_stat = var_l1 / (job.eta**2 * gsq + 1e-30)
+            history["step"].append(step)
+            history["loss"].append(loss)
+            history["val_loss"].append(val)
+            history["global_batch"].append(plan.global_batch)
+            history["T"].append(t_stat)
+            history["var_l1"].append(var_l1)
+            history["grad_sqnorm"].append(gsq)
+            history["samples"].append(samples)
+            history["time"].append(time.time() - t0)
+            if log_f:
+                log_f.write(f"{step},{samples},{plan.global_batch},"
+                            f"{plan.accum_steps},{plan.micro_batch},{loss:.4f},"
+                            f"{val:.4f},{t_stat:.1f},{var_l1:.4g},{gsq:.4g},"
+                            f"{time.time()-t0:.1f}\n")
+                log_f.flush()
+
+    if job.checkpoint_dir:
+        save_checkpoint(job.checkpoint_dir, step,
+                        {"params": params, "opt": opt_state},
+                        metadata={"job": dataclasses.asdict(job)})
+    if log_f:
+        log_f.close()
+    history["final_params"] = params
+    return history
+
+
+def summarize(history: dict) -> dict:
+    losses = [l for l in history["loss"] if math.isfinite(l)]
+    vals = [v for v in history["val_loss"] if math.isfinite(v)]
+    return {
+        "steps": history["step"][-1] if history["step"] else 0,
+        "avg_batch": float(np.mean(history["global_batch"])) if history["global_batch"] else 0,
+        "best_loss": min(losses) if losses else math.nan,
+        "best_val_loss": min(vals) if vals else math.nan,
+        "wall_s": history["time"][-1] if history["time"] else 0.0,
+    }
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    for f in dataclasses.fields(TrainJob):
+        name = "--" + f.name.replace("_", "-")
+        if f.type == "bool" or isinstance(f.default, bool):
+            p.add_argument(name, action="store_true", default=f.default)
+        elif f.name == "stages":
+            p.add_argument(name, type=str, default=None,
+                           help="e.g. '0.025:16,0.025:64,0.95:256'")
+        else:
+            typ = type(f.default) if f.default is not None else str
+            if f.default is None:
+                typ = int
+            p.add_argument(name, type=typ, default=f.default)
+    args = p.parse_args(argv)
+    kw = vars(args)
+    if isinstance(kw.get("stages"), str) and kw["stages"]:
+        kw["stages"] = tuple((float(a), int(b)) for a, b in
+                             (s.split(":") for s in kw["stages"].split(",")))
+    elif kw.get("stages") is None:
+        kw["stages"] = TrainJob.stages
+    job = TrainJob(**kw)
+    hist = run_training(job)
+    print(json.dumps(summarize(hist), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+from repro.models.config import (
+    ModelConfig, MoEConfig, MLAConfig, SSMConfig, RGLRUConfig,
+    EncoderConfig, FrontendConfig,
+)
+from repro.models.model import Model, build_model
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "SSMConfig", "RGLRUConfig",
+    "EncoderConfig", "FrontendConfig", "Model", "build_model",
+]

@@ -1,0 +1,64 @@
+"""Token embeddings, RoPE, and sinusoidal positions."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init
+from repro.distributed.sharding import maybe_shard
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    return {"table": normal_init(key, (vocab, d), dtype)}
+
+
+def embed_tokens(params, tokens, scale: bool, d_model: int):
+    table = maybe_shard(params["table"], "vocab", "embed")
+    x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(jnp.sqrt(d_model), x.dtype)
+    return x
+
+
+def unembed(params, x, tied_table=None):
+    """Project hidden states to vocab logits (tied or untied)."""
+    table = tied_table if tied_table is not None else params["table"]
+    table = maybe_shard(table, "vocab", "embed")
+    return jnp.einsum("...d,vd->...v", x, table.astype(x.dtype))
+
+
+# ---------------------------------------------------------------- RoPE ----
+
+def rope_frequencies(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                       # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)                # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                   # broadcast over heads
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_at(pos, d: int, dtype):
+    """Sinusoidal embedding row at (possibly traced) scalar position `pos`."""
+    log_timescale = jnp.log(10000.0) / (d // 2 - 1)
+    inv_timescales = jnp.exp(-log_timescale * jnp.arange(d // 2, dtype=jnp.float32))
+    scaled = pos.astype(jnp.float32) * inv_timescales if hasattr(pos, "astype") \
+        else float(pos) * inv_timescales
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1).astype(dtype)
+
+
+def sinusoidal_positions(num_pos: int, d: int, dtype):
+    """Whisper-style fixed sinusoidal embeddings, shape (num_pos, d)."""
+    log_timescale = jnp.log(10000.0) / (d // 2 - 1)
+    inv_timescales = jnp.exp(-log_timescale * jnp.arange(d // 2, dtype=jnp.float32))
+    scaled = jnp.arange(num_pos, dtype=jnp.float32)[:, None] * inv_timescales[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1).astype(dtype)

@@ -1,0 +1,139 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Training/prefill uses the expanded form; decode uses the *absorbed* form that
+attends directly in the compressed latent space (the whole point of MLA: the
+KV cache stores only `c_kv` (rank 512) plus the shared RoPE key, instead of
+full per-head K/V).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init, split_keys
+from repro.models.norms import init_norm, apply_norm
+from repro.models.embeddings import apply_rope
+from repro.models.attention import causal_mask, NEG_INF
+from repro.models.config import MLAConfig
+from repro.distributed.sharding import maybe_shard
+
+
+def init_mla(key, d_model: int, num_heads: int, m: MLAConfig, dtype):
+    keys = split_keys(key, 8)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {}
+    if m.q_lora_rank:
+        p["w_dq"] = normal_init(keys[0], (d_model, m.q_lora_rank), dtype)
+        p["q_norm"] = init_norm(keys[0], m.q_lora_rank, "rmsnorm", dtype)
+        p["w_uq"] = normal_init(keys[1], (m.q_lora_rank, num_heads, qk_dim), dtype)
+    else:
+        p["w_q"] = normal_init(keys[1], (d_model, num_heads, qk_dim), dtype)
+    p["w_dkv"] = normal_init(keys[2], (d_model, m.kv_lora_rank), dtype)
+    p["kv_norm"] = init_norm(keys[3], m.kv_lora_rank, "rmsnorm", dtype)
+    p["w_krope"] = normal_init(keys[4], (d_model, m.qk_rope_head_dim), dtype)
+    p["w_uk"] = normal_init(keys[5], (m.kv_lora_rank, num_heads, m.qk_nope_head_dim), dtype)
+    p["w_uv"] = normal_init(keys[6], (m.kv_lora_rank, num_heads, m.v_head_dim), dtype)
+    p["w_o"] = normal_init(keys[7], (num_heads, m.v_head_dim, d_model), dtype)
+    return p
+
+
+def _queries(params, x, positions, m: MLAConfig):
+    if "w_dq" in params:
+        cq = jnp.einsum("btd,dr->btr", x, params["w_dq"].astype(x.dtype))
+        cq = apply_norm(params["q_norm"], cq, "rmsnorm")
+        q = jnp.einsum("btr,rhk->bthk", cq, params["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, params["w_q"].astype(x.dtype))
+    q = maybe_shard(q, "batch", "seq", "heads", None)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, 10000.0)
+    return q_nope, q_rope
+
+
+def _latents(params, x, positions, m: MLAConfig):
+    c_kv = jnp.einsum("btd,dr->btr", x, params["w_dkv"].astype(x.dtype))
+    c_kv = apply_norm(params["kv_norm"], c_kv, "rmsnorm")
+    k_rope = jnp.einsum("btd,dr->btr", x, params["w_krope"].astype(x.dtype))
+    # shared rope key: single head
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, 10000.0)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def _mla_attend(q_nope, q_rope, k_nope, k_rope, v, m: MLAConfig,
+                causal: bool, offset=0):
+    """One (possibly chunked) MLA attention: q over full kv."""
+    t, s = q_nope.shape[1], k_nope.shape[1]
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits = jnp.einsum("bthn,bshn->bhts", q_nope, k_nope)
+    logits += jnp.einsum("bthr,bsr->bhts", q_rope, k_rope)
+    logits = logits.astype(jnp.float32) * scale
+    if causal:
+        mask = causal_mask(t, s, offset=offset)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhts,bshv->bthv", probs, v)
+
+
+def mla_full(params, x, positions, m: MLAConfig, causal: bool = True,
+             q_chunk: int = 512):
+    """Expanded-form MLA over a full sequence (training / prefill); queries
+    are chunk-scanned for long sequences (flash-style memory bound)."""
+    b, t, _ = x.shape
+    q_nope, q_rope = _queries(params, x, positions, m)
+    c_kv, k_rope = _latents(params, x, positions, m)
+    k_nope = jnp.einsum("btr,rhn->bthn", c_kv, params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("btr,rhv->bthv", c_kv, params["w_uv"].astype(x.dtype))
+    if t >= 2048 and t % q_chunk == 0:
+        nc = t // q_chunk
+        qn = jnp.moveaxis(q_nope.reshape(b, nc, q_chunk, *q_nope.shape[2:]), 1, 0)
+        qr = jnp.moveaxis(q_rope.reshape(b, nc, q_chunk, *q_rope.shape[2:]), 1, 0)
+
+        def body(carry, xs):
+            qni, qri, ci = xs
+            return carry, _mla_attend(qni, qri, k_nope, k_rope, v, m, causal,
+                                      offset=ci * q_chunk)
+
+        body = jax.checkpoint(body)
+        _, out = jax.lax.scan(body, None, (qn, qr, jnp.arange(nc)))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, t, *out.shape[3:])
+    else:
+        out = _mla_attend(q_nope, q_rope, k_nope, k_rope, v, m, causal)
+    out = jnp.einsum("bthv,hvd->btd", out, params["w_o"].astype(x.dtype))
+    return maybe_shard(out, "batch", "seq", "embed")
+
+
+def init_mla_cache(batch: int, cache_len: int, m: MLAConfig, dtype):
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(params, x, cache, pos, m: MLAConfig, ring: bool = False):
+    """Absorbed-form single-token decode against the latent cache."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _queries(params, x, positions, m)          # (b,1,h,*)
+    c_new, kr_new = _latents(params, x, positions, m)           # (b,1,r)
+    cache_len = cache["c_kv"].shape[1]
+    slot = pos % cache_len if ring else pos
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+    # absorb W_uk into the query: attend in latent space
+    q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, params["w_uk"].astype(x.dtype))
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits = jnp.einsum("bthr,bsr->bhts", q_lat, c_kv.astype(x.dtype))
+    logits += jnp.einsum("bthr,bsr->bhts", q_rope, k_rope.astype(x.dtype))
+    logits = logits.astype(jnp.float32) * scale
+    kpos = jnp.arange(cache_len)
+    if ring:
+        valid = (kpos <= pos) | (pos >= cache_len)
+    else:
+        valid = kpos <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhts,bsr->bthr", probs, c_kv.astype(x.dtype))
+    out = jnp.einsum("bthr,rhv->bthv", out_lat, params["w_uv"].astype(x.dtype))
+    out = jnp.einsum("bthv,hvd->btd", out, params["w_o"].astype(x.dtype))
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,47 @@
+"""Public model API: a thin functional wrapper around the transformer stack."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.common import count_params
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key) -> dict:
+        return tfm.init_params(key, self.cfg)
+
+    def loss(self, params, batch):
+        return tfm.loss_fn(params, batch, self.cfg)
+
+    def logits(self, params, batch):
+        hidden, _, offset, _ = tfm.forward(params, batch, self.cfg)
+        if offset:
+            hidden = hidden[:, offset:]
+        return tfm._logits(params, hidden, self.cfg)
+
+    def prefill(self, params, batch):
+        return tfm.prefill(params, batch, self.cfg)
+
+    def init_cache(self, batch: int, cache_len: int, ring: bool = False):
+        return tfm.init_decode_cache(self.cfg, batch, cache_len, ring=ring)
+
+    def decode_step(self, params, cache, tokens, pos, ring: bool = False):
+        return tfm.decode_step(params, cache, tokens, pos, self.cfg, ring=ring)
+
+    def num_params(self, params=None) -> int:
+        if params is not None:
+            return count_params(params)
+        return self.cfg.param_count()
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

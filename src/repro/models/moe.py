@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based capacity dispatch,
+shared experts (DeepSeek-V2), switch-style load-balance aux loss.
+
+Dispatch is the TPU-friendly sort/capacity scheme: token-expert pairs are
+sorted by expert id, truncated to a static per-expert capacity, batched into
+an (E, C, d) tensor and processed with a single (E,d,f) einsum — MXU-dense,
+expert dim sharded over the `model` mesh axis (expert parallelism).  Tokens
+over capacity are dropped (standard GShard/Switch behaviour); capacity_factor
+controls the drop rate.
+
+Sharding-critical structure (measured in EXPERIMENTS.md §Perf-2):
+  * dispatch groups are batch rows (GShard "groups") so the argsort is
+    shard-local under any batch sharding;
+  * both dispatch and combine are *slot-major* — the expert-sharded (E, C, d)
+    tensor is produced by a gather (local fwd, cheap bwd) and consumed by a
+    scatter-add whose only collective is an (n, d) all-reduce.  Pair-major
+    formulations make GSPMD replicate (n·k, d) buffers (24 GB/layer on
+    deepseek-v2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init, split_keys
+from repro.models.config import MoEConfig
+from repro.distributed.sharding import maybe_shard
+
+
+def init_moe(key, d_model: int, m: MoEConfig, mlp_kind: str, dtype):
+    k_r, k_g, k_u, k_d, k_s = split_keys(key, 5)
+    p = {
+        "router": normal_init(k_r, (d_model, m.num_experts), dtype),
+        "w_gate": normal_init(k_g, (m.num_experts, d_model, m.d_expert), dtype),
+        "w_up": normal_init(k_u, (m.num_experts, d_model, m.d_expert), dtype),
+        "w_down": normal_init(k_d, (m.num_experts, m.d_expert, d_model), dtype),
+    }
+    if m.num_shared_experts:
+        width = m.num_shared_experts * m.shared_d_expert
+        ks1, ks2, ks3 = split_keys(k_s, 3)
+        p["shared"] = {
+            "w_gate": normal_init(ks1, (d_model, width), dtype),
+            "w_up": normal_init(ks2, (d_model, width), dtype),
+            "w_down": normal_init(ks3, (width, d_model), dtype),
+        }
+    return p
+
+
+def _capacity(num_tokens: int, m: MoEConfig, capacity_factor: float) -> int:
+    c = int(capacity_factor * num_tokens * m.top_k / m.num_experts)
+    return max(min(c, num_tokens), 1)
+
+
+def moe_apply(params, x, m: MoEConfig, *, capacity_factor: float | None = None,
+              normalize_gates: bool = True):
+    """x: (b, t, d) -> (out, aux_loss).
+
+    Dispatch groups are batch rows (GShard "groups"): the sort and the
+    capacity budget are per-row, so with the batch sharded over the data axes
+    the entire dispatch is shard-local — no global argsort collectives
+    (§Perf-2.2).  Capacity C = factor·t·top_k/E per row."""
+    b, t, d = x.shape
+
+    def row(xt):
+        return _moe_row(params, xt, m, capacity_factor, normalize_gates)
+
+    y, aux = jax.vmap(row)(x)
+    return maybe_shard(y, "batch", "seq", "embed"), jnp.mean(aux)
+
+
+def _moe_row(params, xt, m: MoEConfig, capacity_factor, normalize_gates):
+    """One dispatch group. xt: (n, d) -> ((n, d), aux)."""
+    n, d = xt.shape
+    dt = xt.dtype
+    router_logits = jnp.einsum("nd,de->ne", xt, params["router"].astype(dt))
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, m.top_k)               # (n, k)
+    if normalize_gates:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+
+    # switch-style load balance loss over all-k assignments
+    one_hot_k = jax.nn.one_hot(expert_idx, m.num_experts, dtype=jnp.float32)  # (n,k,E)
+    frac_tokens = jnp.mean(jnp.sum(one_hot_k, axis=1), axis=0)      # (E,)
+    frac_probs = jnp.mean(probs, axis=0)                            # (E,)
+    aux = m.num_experts * jnp.sum(frac_tokens * frac_probs) * m.router_aux_coef
+
+    # ---- sort-based capacity dispatch ----
+    cap = _capacity(n, m, capacity_factor if capacity_factor is not None
+                    else m.capacity_factor)
+    pair_expert = expert_idx.reshape(-1)                            # (n*k,)
+    pair_gate = gates.reshape(-1).astype(dt)
+    pair_token = jnp.repeat(jnp.arange(n), m.top_k)
+    order = jnp.argsort(pair_expert)                                # stable
+    se, sg, st = pair_expert[order], pair_gate[order], pair_token[order]
+    # position of each pair within its expert group
+    counts = jnp.bincount(se, length=m.num_experts)                 # (E,)
+    starts = jnp.cumsum(counts) - counts                            # (E,)
+    pos_in_expert = jnp.arange(n * m.top_k) - starts[se]
+    keep = pos_in_expert < cap
+    dest = jnp.where(keep, se * cap + pos_in_expert, n * m.top_k)   # overflow slot
+
+    # slot -> token map (small int scatters; dest is unique by construction)
+    n_slots = m.num_experts * cap
+    slot_token = jnp.full((n_slots + 1,), n, jnp.int32).at[dest].set(
+        st, unique_indices=True, mode="drop")[:n_slots]
+    slot_gate = jnp.zeros((n_slots + 1,), dt).at[dest].set(
+        jnp.where(keep, sg, 0), unique_indices=True, mode="drop")[:n_slots]
+
+    # ---- slot-major dispatch (§Perf-2.3): GATHER from the (replicated)
+    # token array with expert-sharded slot indices.  Forward is shard-local;
+    # backward is a partial scatter-add + one (n,d) all-reduce.  The previous
+    # scatter-set formulation replicated its 10 GB/layer cotangent with an
+    # all-gather on deepseek-v2.
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), dt)], axis=0)
+    slot_token_ec = maybe_shard(slot_token.reshape(m.num_experts, cap),
+                                "experts", None)
+    edx = xt_pad[slot_token_ec]                                     # (E, C, d)
+    edx = maybe_shard(edx, "experts", None, "embed")
+
+    gate_w = params["w_gate"].astype(dt)
+    up_w = params["w_up"].astype(dt)
+    down_w = params["w_down"].astype(dt)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", edx, gate_w)) * jnp.einsum(
+        "ecd,edf->ecf", edx, up_w)
+    h = maybe_shard(h, "experts", None, None)
+    eout = jnp.einsum("ecf,efd->ecd", h, down_w)                    # (E, C, d)
+
+    # ---- slot-major combine (§Perf-2.1): scatter-add from the expert-sharded
+    # slot axis into token space.  The pair-major formulation
+    # (`eout_flat[dest] * gate`) gathers from a sharded operand with
+    # replicated indices, which GSPMD implements by ALL-REDUCING the whole
+    # (n·k, d) gather result — 24 GB/layer on deepseek-v2.  Slot-major keeps
+    # the big operand sharded and all-reduces only the (n, d) output.
+    sg_ec = maybe_shard(slot_gate.reshape(m.num_experts, cap), "experts", None)
+    contrib = eout * sg_ec[..., None]                               # (E, C, d)
+    # NOTE: a token can occupy up to top_k slots -> indices NOT unique here
+    y = jnp.zeros((n + 1, d), dt).at[slot_token_ec].add(contrib, mode="drop")[:n]
+
+    if "shared" in params:
+        sh = params["shared"]
+        hs = jax.nn.silu(jnp.einsum("nd,df->nf", xt, sh["w_gate"].astype(dt)))
+        hs = hs * jnp.einsum("nd,df->nf", xt, sh["w_up"].astype(dt))
+        y = y + jnp.einsum("nf,fd->nd", hs, sh["w_down"].astype(dt))
+
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,32 @@
+"""RMSNorm / LayerNorm (pure-pytree params)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import ones_init, zeros_init
+
+
+def init_norm(key, d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": ones_init(key, (d,), dtype)}
+    elif kind == "layernorm":
+        return {"scale": ones_init(key, (d,), dtype), "bias": zeros_init(key, (d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * (1.0 / jnp.sqrt(var + eps))
+        y = y * params["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) / jnp.sqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(dtype)

@@ -1,0 +1,106 @@
+"""RecurrentGemma / Griffin RG-LRU recurrent block [arXiv:2402.19427].
+
+Block: two branches from d_model -> lru_width; branch A goes through GeLU,
+branch B through a causal depthwise conv1d then the RG-LRU recurrence; the
+branches are multiplied and projected back to d_model.
+
+RG-LRU:  r_t = sigmoid(W_a x_t + b_a),  i_t = sigmoid(W_x x_t + b_x)
+         a_t = exp(-c * softplus(Lambda) * r_t)
+         h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses `jax.lax.associative_scan` (log-depth, TPU friendly); decode is
+a single fused recurrence step with conv ring state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import normal_init, zeros_init, split_keys
+from repro.models.config import RGLRUConfig
+from repro.distributed.sharding import maybe_shard
+
+
+def init_rglru(key, d_model: int, r: RGLRUConfig, dtype):
+    w = r.lru_width or d_model
+    keys = split_keys(key, 7)
+    return {
+        "w_branch_a": normal_init(keys[0], (d_model, w), dtype),
+        "w_branch_b": normal_init(keys[1], (d_model, w), dtype),
+        "conv_w": normal_init(keys[2], (r.conv_width, w), dtype),
+        "conv_b": zeros_init(keys[2], (w,), dtype),
+        "w_rg": normal_init(keys[3], (w, w), dtype, stddev=0.02),
+        "b_rg": zeros_init(keys[3], (w,), dtype),
+        "w_ig": normal_init(keys[4], (w, w), dtype, stddev=0.02),
+        "b_ig": zeros_init(keys[4], (w,), dtype),
+        # Lambda init so that a ~ uniform(0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": normal_init(keys[5], (w,), jnp.float32, stddev=0.5),
+        "w_out": normal_init(keys[6], (w, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (b,t,w); w: (k,w)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    return out + b[None, None, :]
+
+
+def _gates(params, x, c_constant):
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", x, params["w_rg"].astype(x.dtype))
+                       + params["b_rg"].astype(x.dtype))
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", x, params["w_ig"].astype(x.dtype))
+                       + params["b_ig"].astype(x.dtype))
+    log_a = -c_constant * jax.nn.softplus(params["lam"])[None, None, :] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12)) * (
+        i.astype(jnp.float32) * x.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_scan(a, bx):
+    """h_t = a_t h_{t-1} + bx_t over axis=1 via associative scan."""
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h
+
+
+def rglru_block(params, x, r: RGLRUConfig):
+    """Full-sequence RG-LRU block. x: (b,t,d) -> (b,t,d)."""
+    branch_a = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_branch_a"].astype(x.dtype)))
+    u = jnp.einsum("btd,dw->btw", x, params["w_branch_b"].astype(x.dtype))
+    u = maybe_shard(u, "batch", "seq", "lru_width")
+    u = _causal_conv(u, params["conv_w"].astype(x.dtype), params["conv_b"].astype(x.dtype))
+    a, bx = _gates(params, u, r.c_constant)
+    h = rglru_scan(a, bx).astype(x.dtype)
+    y = branch_a * h
+    out = jnp.einsum("btw,wd->btd", y, params["w_out"].astype(x.dtype))
+    return maybe_shard(out, "batch", "seq", "embed")
+
+
+def init_rglru_state(batch: int, d_model: int, r: RGLRUConfig, dtype):
+    w = r.lru_width or d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, r.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(params, x, state, r: RGLRUConfig):
+    """Single-token step. x: (b,1,d)."""
+    branch_a = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, params["w_branch_a"].astype(x.dtype)))
+    u = jnp.einsum("btd,dw->btw", x, params["w_branch_b"].astype(x.dtype))
+    conv_in = jnp.concatenate([state["conv"], u], axis=1)          # (b, k, w)
+    wconv = params["conv_w"].astype(x.dtype)
+    u_conv = jnp.einsum("bkw,kw->bw", conv_in, wconv) + params["conv_b"].astype(x.dtype)
+    u_conv = u_conv[:, None, :]
+    a, bx = _gates(params, u_conv, r.c_constant)
+    h = a[:, 0] * state["h"] + bx[:, 0]
+    y = branch_a[:, 0] * h.astype(x.dtype)
+    out = jnp.einsum("bw,wd->bd", y, params["w_out"].astype(x.dtype))[:, None, :]
+    return out, {"h": h, "conv": conv_in[:, 1:, :]}

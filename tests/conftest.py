@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+
+def run_subprocess(code: str, devices: int = 1, timeout: int = 560) -> str:
+    """Run a python snippet in a fresh process with a forced device count
+    (keeps the main pytest process at 1 device, per the dry-run isolation
+    rule)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if devices > 1:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{res.stdout}\n{res.stderr}")
+    return res.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

@@ -1,0 +1,29 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import (
+    save_checkpoint, restore_checkpoint, latest_step)
+
+
+def test_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3),
+                   "blocks": [{"a": jnp.ones((4,))}, {"a": jnp.zeros((4,))}]},
+        "count": jnp.asarray(7, jnp.int32),
+    }
+    d = str(tmp_path)
+    save_checkpoint(d, 42, tree, metadata={"note": "hi"})
+    assert latest_step(d) == 42
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = restore_checkpoint(d, 42, like)
+    assert meta["step"] == 42 and meta["note"] == "hi"
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 restored, tree)
+
+
+def test_latest_of_many(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 5, 3):
+        save_checkpoint(d, s, {"x": jnp.zeros(2)})
+    assert latest_step(d) == 5

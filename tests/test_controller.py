@@ -1,0 +1,84 @@
+"""Algorithm 1 controller: unit + hypothesis property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.controller import (
+    ControllerConfig, init_controller, controller_update)
+from repro.core.schedule import round_plan
+
+
+@given(desired=st.integers(1, 10_000_000), workers=st.sampled_from([1, 2, 4, 16, 32]),
+       micro=st.sampled_from([1, 2, 4, 8]), max_micro=st.sampled_from([8, 16]),
+       accum=st.sampled_from([1, 2, 16]))
+@settings(max_examples=200, deadline=None)
+def test_round_plan_invariants(desired, workers, micro, max_micro, accum):
+    max_global = 8192
+    plan = round_plan(desired, workers, micro, max_micro, accum, max_global)
+    # Algorithm 1 rounding chain invariants
+    assert plan.global_batch == plan.workers * plan.accum_steps * plan.micro_batch
+    assert plan.micro_batch <= max_micro
+    assert plan.micro_batch >= 1 and plan.accum_steps >= 1
+    assert plan.global_batch <= max(max_global, workers * micro)
+    if desired <= max_global:
+        # rounded result must cover the request
+        assert plan.global_batch >= min(desired, max_global) or \
+            plan.global_batch + workers * plan.micro_batch > min(desired, max_global)
+
+
+@given(var=st.floats(0, 1e6, allow_nan=False), gsq=st.floats(1e-6, 1e6),
+       eta=st.floats(0.05, 0.9))
+@settings(max_examples=100, deadline=None)
+def test_controller_monotone_and_clamped(var, gsq, eta):
+    cfg = ControllerConfig(eta=eta, workers=4, base_micro_batch=2,
+                           max_micro_batch=8, base_accum=2,
+                           base_global_batch=16, max_global_batch=1024)
+    st_ = init_controller(cfg)
+    prev = st_.plan.global_batch
+    for _ in range(5):
+        st_ = controller_update(cfg, st_, var, gsq)
+        assert st_.plan.global_batch >= prev          # monotonic growth
+        assert st_.plan.global_batch <= 1024          # clamped
+        prev = st_.plan.global_batch
+
+
+def test_controller_grows_exactly_when_T_exceeds_b():
+    cfg = ControllerConfig(eta=0.5, workers=2, base_micro_batch=1,
+                           max_micro_batch=1, base_accum=1,
+                           base_global_batch=2, max_global_batch=4096)
+    s = init_controller(cfg)
+    assert s.plan.global_batch == 2
+    # T = var/(eta^2 gsq) = 100/(0.25*1) = 400 > 2 -> grow to >= 400
+    s = controller_update(cfg, s, var_l1=100.0, grad_sqnorm=1.0)
+    assert s.plan.global_batch >= 400
+    assert s.plan.global_batch % 2 == 0
+    # T below current batch -> keep
+    b = s.plan.global_batch
+    s = controller_update(cfg, s, var_l1=1e-9, grad_sqnorm=1.0)
+    assert s.plan.global_batch == b
+
+
+def test_at_max_latch_stops_testing():
+    cfg = ControllerConfig(eta=0.1, workers=1, base_micro_batch=1,
+                           max_micro_batch=1, base_accum=1,
+                           base_global_batch=1, max_global_batch=8)
+    s = init_controller(cfg)
+    s = controller_update(cfg, s, var_l1=1e9, grad_sqnorm=1.0)
+    assert s.plan.global_batch == 8 and s.at_max
+    s2 = controller_update(cfg, s, var_l1=1e9, grad_sqnorm=1.0)
+    assert s2.plan.global_batch == 8
+
+
+def test_test_interval_skips():
+    cfg = ControllerConfig(eta=0.1, workers=1, base_micro_batch=1,
+                           max_micro_batch=1, base_accum=1,
+                           base_global_batch=1, max_global_batch=1024,
+                           test_interval=3)
+    s = init_controller(cfg)
+    s = controller_update(cfg, s, 1e9, 1.0)   # step 1: skipped (1 % 3 != 0)
+    assert s.plan.global_batch == 1
+    s = controller_update(cfg, s, 1e9, 1.0)   # step 2: skipped
+    assert s.plan.global_batch == 1
+    s = controller_update(cfg, s, 1e9, 1.0)   # step 3: tested
+    assert s.plan.global_batch > 1

@@ -1,0 +1,63 @@
+"""The dry-run machinery itself: lower_combo produces a coherent record
+(cost calibration, collectives, roofline terms) — run in a subprocess since
+dryrun.py forces 512 host devices on import."""
+import json
+import pytest
+
+
+def test_lower_combo_record(subproc):
+    out = subproc("""
+import json
+from repro.launch.dryrun import lower_combo
+compiled, rec = lower_combo("llama3.2-1b", "decode_32k", multi_pod=False)
+rl = rec["roofline"]
+assert rec["devices"] == 256 and rec["workers_J"] == 16
+assert rl["flops"] > 0 and rl["hbm_bytes"] > 0
+assert rl["bottleneck"] in ("compute", "memory", "collective")
+assert rec["memory"]["argument_size_in_bytes"] > 0
+# calibration present and monotone (depth-2 cost > depth-1 cost)
+cal = rec["cost"]["calibration"]
+assert cal["f2"] > cal["f1"] > 0 and cal["repeats"] == 16
+print("DRYRUN_OK", json.dumps({k: rl[k] for k in ("bottleneck",)}))
+""", devices=1, timeout=560)
+    assert "DRYRUN_OK" in out
+
+
+def test_roofline_parser_units():
+    from repro.launch.roofline import (_shape_bytes, parse_collectives,
+                                       wire_bytes, roofline_terms)
+    assert _shape_bytes("bf16[16,128]{1,0}") == 16 * 128 * 2
+    assert _shape_bytes("(f32[8,8]{1,0}, u32[4]{0})") == 8 * 8 * 4 + 4 * 4
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(%x), channel_id=1
+  %ag.1 = bf16[64,64]{1,0} all-gather(%y), dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(f32[512]{0} %z), dimensions={0}
+"""
+    coll = parse_collectives(hlo)
+    assert coll["all-reduce"]["count"] == 1
+    assert coll["all-reduce"]["result_bytes"] == 4096
+    assert coll["all-gather"]["result_bytes"] == 64 * 64 * 2
+    assert coll["reduce-scatter"]["operand_bytes"] == 512 * 4 + 32 * 4 or \
+        coll["reduce-scatter"]["operand_bytes"] >= 512 * 4
+    wb = wire_bytes(coll)
+    assert wb >= 2 * 4096 + 64 * 64 * 2
+    rl = roofline_terms({"flops": 197e12, "bytes accessed": 819e9}, hlo, 0.0)
+    assert abs(rl.compute_s - 1.0) < 1e-6
+    assert abs(rl.memory_s - 1.0) < 1e-6
+    assert rl.bottleneck in ("compute", "memory")
+
+
+def test_model_flops_accounting():
+    from repro.launch.roofline import model_flops_per_step
+    from repro.configs import get_config
+    from repro.configs.shapes import INPUT_SHAPES
+    cfg = get_config("llama3.2-1b")
+    f_train = model_flops_per_step(cfg, INPUT_SHAPES["train_4k"], 256)
+    # 6 * N_active * tokens / devices
+    expect = 6 * cfg.param_count(active_only=True) * 256 * 4096 / 256
+    assert abs(f_train - expect) / expect < 1e-9
+    f_dec = model_flops_per_step(cfg, INPUT_SHAPES["decode_32k"], 256)
+    assert f_dec == 2 * cfg.param_count(active_only=True) * 128 / 256
+    # MoE: active < total
+    moe = get_config("dbrx-132b")
+    assert moe.param_count(active_only=True) < 0.35 * moe.param_count()

@@ -1,0 +1,49 @@
+"""GNS estimators: consistency with the norm-test statistics on synthetic
+gradients with known noise scale."""
+import numpy as np
+import pytest
+
+from repro.core.gns import gns_from_norm_test, unbiased_gns_pair, GNSTracker
+
+
+def synthetic_stats(b, J, d, mu, sigma, seed=0, reps=2000):
+    """Simulate worker gradients g_j = mu + noise/sqrt(b/J) and return the
+    eq.(5) statistics averaged over reps."""
+    rng = np.random.default_rng(seed)
+    b_w = b // J
+    var_l1s, gsqs = [], []
+    for _ in range(reps):
+        gj = mu[None] + rng.standard_normal((J, d)) * sigma / np.sqrt(b_w)
+        g = gj.mean(0)
+        var_l1s.append(((gj - g) ** 2).sum(1).mean())
+        gsqs.append((g ** 2).sum())
+    return float(np.mean(var_l1s)), float(np.mean(gsqs))
+
+
+def test_point_estimate_recovers_noise_scale():
+    d, b, J = 16, 64, 8
+    mu = np.ones(d) * 0.5
+    sigma = 2.0
+    var_l1, gsq = synthetic_stats(b, J, d, mu, sigma)
+    est = gns_from_norm_test(var_l1, gsq, b, J)
+    true_tr_sigma = d * sigma**2
+    # E var_l1 = tr(Sigma)/b_w * (1 - 1/J); accept the (1-1/J) bias envelope
+    assert true_tr_sigma * 0.7 < est["tr_sigma"] < true_tr_sigma * 1.1
+
+
+def test_unbiased_pair_beats_point_estimate():
+    d, b, J = 16, 64, 8
+    mu = np.ones(d) * 0.5
+    sigma = 2.0
+    var_l1, gsq = synthetic_stats(b, J, d, mu, sigma, reps=4000)
+    est = unbiased_gns_pair(var_l1, gsq, b, J)
+    true_b_simple = d * sigma**2 / (mu ** 2).sum()
+    assert abs(est["b_simple"] - true_b_simple) / true_b_simple < 0.15
+
+
+def test_tracker_converges():
+    t = GNSTracker(alpha=0.5)
+    for _ in range(20):
+        t = t.update(var_l1=4.0, grad_sqnorm=1.0, global_batch=64, workers=8)
+    pair = unbiased_gns_pair(4.0, 1.0, 64, 8)
+    assert abs(t.b_simple - pair["b_simple"]) < 1e-6

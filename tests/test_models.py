@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests: reduced variants, one forward/train step on
+CPU, shapes + finiteness; decode == full-forward equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_smoke_config, get_config
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig, init_adamw, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_smoke_batch(cfg, b=2, t=32):
+    text_len = t - (cfg.frontend.num_prefix_tokens
+                    if cfg.frontend.kind == "vision_stub" else 0)
+    batch = {
+        "tokens": jax.random.randint(KEY, (b, text_len), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (b, text_len), 0, cfg.vocab_size),
+    }
+    if cfg.frontend.kind == "vision_stub":
+        batch["patch_embeds"] = jnp.ones(
+            (b, cfg.frontend.num_prefix_tokens, cfg.d_model), cfg.act_dtype)
+    if cfg.frontend.kind == "audio_stub":
+        batch["frames"] = jnp.ones(
+            (b, cfg.encoder.num_frames, cfg.d_model), cfg.act_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = make_smoke_batch(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert jnp.isfinite(loss), arch
+    logits = model.logits(params, batch)
+    assert logits.shape == (*batch["tokens"].shape, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits))
+    # one full train step: grads finite, params change, loss finite after
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    for leaf in jax.tree.leaves(grads):
+        assert jnp.all(jnp.isfinite(leaf)), arch
+    opt = init_adamw(params)
+    new_params, _, gnorm = adamw_update(params, grads, opt, AdamWConfig(), 1e-3)
+    assert float(gnorm) > 0
+    loss2, _ = model.loss(new_params, batch)
+    assert jnp.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
+                                  if get_smoke_config(a).frontend.kind == "none"])
+def test_decode_matches_forward(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b, t = 2, 16
+    tokens = jax.random.randint(KEY, (b, t), 0, cfg.vocab_size)
+    full = model.logits(params, {"tokens": tokens, "labels": tokens})
+    cache = model.init_cache(b, t)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for i in range(t):
+        lg, cache = step(params, cache, tokens[:, i], jnp.int32(i))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_ring_decode_long_context_mode(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    cache = model.init_cache(2, 8, ring=True)
+    tok = jnp.zeros((2,), jnp.int32)
+    if cfg.frontend.kind == "audio_stub":
+        cache["cross_prefix"] = [jax.tree.map(jnp.ones_like, c)
+                                 for c in cache["cross_prefix"]]
+        cache["cross_scanned"] = [jax.tree.map(jnp.ones_like, c)
+                                  for c in cache["cross_scanned"]]
+    # position far beyond the ring length must still be finite
+    lg, cache = model.decode_step(params, cache, tok, jnp.int32(37), ring=True)
+    assert jnp.all(jnp.isfinite(lg)), arch
+
+
+def test_scan_vs_unroll_identical():
+    cfg = get_smoke_config("gemma2-27b")
+    model_scan = build_model(cfg.replace(scan_layers=True, num_layers=4))
+    model_unroll = build_model(cfg.replace(scan_layers=False, num_layers=4))
+    params = model_scan.init(KEY)
+    batch = make_smoke_batch(cfg)
+    l1, _ = model_scan.loss(params, batch)
+    l2, _ = model_unroll.loss(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_chunked_attention_matches_direct():
+    """The flash-style jnp q-chunked path must equal direct attention."""
+    from repro.models import attention as A
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    b, t, h, kvh, d = 2, 2048, 4, 2, 32
+    q = jax.random.normal(k1, (b, t, h, d))
+    k = jax.random.normal(k2, (b, t, kvh, d))
+    v = jax.random.normal(k3, (b, t, kvh, d))
+    out_chunk = A._sdpa_chunked(q, k, v, softcap=0.0, causal=True, window=0)
+    mask = A.causal_mask(t, t)
+    out_direct = A._sdpa(q, k, v, mask, 0.0)
+    np.testing.assert_allclose(np.asarray(out_chunk), np.asarray(out_direct),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_full_config_param_counts():
+    """Full (non-smoke) configs must match their model cards (DESIGN §4)."""
+    expect = {
+        "dbrx-132b": (131.6e9, 0.02),
+        "deepseek-v2-236b": (235.6e9, 0.02),
+        "gemma2-27b": (27.2e9, 0.02),
+        "nemotron-4-15b": (15.6e9, 0.05),
+        "phi3-mini-3.8b": (3.8e9, 0.05),
+        "recurrentgemma-9b": (9.4e9, 0.05),
+        "mamba2-370m": (0.37e9, 0.05),
+        "llama3.2-1b": (1.24e9, 0.02),
+        "whisper-base": (0.072e9, 0.1),
+    }
+    for arch, (want, tol) in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - want) / want < tol, (arch, got, want)
+
+
+def test_moe_aux_loss_and_balance():
+    from repro.models.moe import init_moe, moe_apply
+    from repro.models.config import MoEConfig
+    m = MoEConfig(num_experts=4, top_k=2, d_expert=32, capacity_factor=2.0)
+    p = init_moe(jax.random.PRNGKey(1), 16, m, "swiglu", jnp.float32)
+    x = jax.random.normal(KEY, (2, 8, 16))
+    out, aux = moe_apply(p, x, m)
+    assert out.shape == x.shape
+    assert float(aux) > 0  # switch aux loss >= coef * 1.0 at balance

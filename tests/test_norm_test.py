@@ -1,0 +1,67 @@
+"""Unit tests for the paper's core statistic (eq. 3/4/5 estimators)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.norm_test import (
+    per_sample_norm_test, accum_variance_stats, exact_variance_test_holds,
+    tree_sqnorm, tree_sqdiff)
+
+
+def quad_loss(params, example):
+    # per-example loss: ||w - x||^2 => per-sample grads 2(w - x)
+    return jnp.sum((params["w"] - example) ** 2)
+
+
+def test_per_sample_norm_test_matches_manual():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal(5), jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((8, 5)), jnp.float32)
+    res = per_sample_norm_test(quad_loss, {"w": w}, xs, eta=0.5)
+    grads = np.stack([2 * (np.asarray(w) - np.asarray(x)) for x in xs])
+    gmean = grads.mean(0)
+    var_l1 = ((grads - gmean) ** 2).sum() / (len(xs) - 1)
+    np.testing.assert_allclose(res["var_l1"], var_l1, rtol=1e-5)
+    np.testing.assert_allclose(res["grad_sqnorm"], (gmean ** 2).sum(), rtol=1e-5)
+    np.testing.assert_allclose(
+        res["T"], var_l1 / (0.25 * (gmean ** 2).sum() + 1e-30), rtol=1e-5)
+
+
+def test_exact_variance_test_zero_noise():
+    # identical per-sample grads -> zero variance -> test holds for any eta
+    ps = {"w": jnp.ones((4, 3))}
+    assert bool(exact_variance_test_holds(ps, eta=0.01))
+
+
+def test_exact_variance_test_pure_noise():
+    # zero-mean grads -> infinite relative variance -> test must fail
+    ps = {"w": jnp.asarray([[1.0, -1.0], [-1.0, 1.0]])}
+    assert not bool(exact_variance_test_holds(ps, eta=0.9))
+
+
+def test_accum_variance_unbiased_scale():
+    """ACCUM-NORM's rescale maps microbatch variance onto eq.(5)'s per-worker
+    scale: for i.i.d. grads g^m ~ N(mu, s^2 I / micro_size) the estimator
+    should approximate J * tr(Sigma_ps)/b = J*s^2*d/b."""
+    rng = np.random.default_rng(1)
+    d, M, J, reps = 50, 8, 4, 400
+    s2 = 4.0
+    ests = []
+    for r in range(reps):
+        micro = jnp.asarray(rng.standard_normal((M, d)) * np.sqrt(s2), jnp.float32)
+        # micro grads already "data-averaged"; mean grad:
+        g = {"w": jnp.mean(micro, 0)}
+        sq_sum = jnp.sum(jnp.sum(micro ** 2, -1))
+        var_l1, _ = accum_variance_stats(sq_sum, g, M, J)
+        ests.append(float(var_l1))
+    # E[var_l1] = (J/M) * E[V_m] = (J/M) * s2*d
+    expect = J / M * s2 * d
+    assert abs(np.mean(ests) - expect) / expect < 0.1
+
+
+def test_tree_helpers():
+    a = {"x": jnp.ones((3,)), "y": jnp.zeros((2, 2))}
+    b = {"x": jnp.zeros((3,)), "y": jnp.ones((2, 2))}
+    assert float(tree_sqnorm(a)) == 3.0
+    assert float(tree_sqdiff(a, b)) == 7.0

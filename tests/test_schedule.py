@@ -1,0 +1,20 @@
+from repro.core.schedule import (
+    BatchPlan, ConstantSchedule, StagewiseSchedule, round_plan)
+
+
+def test_constant():
+    plan = round_plan(64, 4, 4, 8, 4, 64)
+    s = ConstantSchedule(plan)
+    assert s.plan_for(0, 1000) == plan
+    assert s.plan_for(999, 1000) == plan
+
+
+def test_stagewise_boundaries():
+    s = StagewiseSchedule(((0.025, 16), (0.025, 32), (0.95, 64)),
+                          workers=4, micro_batch=1, max_micro_batch=8,
+                          base_accum=4)
+    total = 10_000
+    assert s.plan_for(0, total).global_batch == 16
+    assert s.plan_for(int(0.03 * total), total).global_batch == 32
+    assert s.plan_for(int(0.9 * total), total).global_batch == 64
+    assert s.plan_for(total - 1, total).global_batch == 64

@@ -1,0 +1,41 @@
+"""input_specs: every (assigned arch x input shape) yields well-formed
+ShapeDtypeStructs without allocating (full configs, eval_shape only)."""
+import jax
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.shapes import INPUT_SHAPES, input_specs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_specs_shapes(arch, shape):
+    cfg = get_config(arch).replace(dtype="bfloat16", param_dtype="bfloat16")
+    spec = input_specs(cfg, shape)
+    sh = INPUT_SHAPES[shape]
+    if sh.kind == "train":
+        assert spec["tokens"].shape[0] == 1                 # accum dim
+        assert spec["tokens"].shape[1] == sh.global_batch
+        total = spec["tokens"].shape[2] + (
+            cfg.frontend.num_prefix_tokens if cfg.frontend.kind == "vision_stub" else 0)
+        assert total == sh.seq_len
+    elif sh.kind == "prefill":
+        assert spec["tokens"].shape[0] == sh.global_batch
+    else:
+        assert spec["tokens"].shape == (sh.global_batch,)
+        leaves = jax.tree.leaves(spec["cache"])
+        assert leaves, "cache must be non-empty"
+        if shape == "long_500k" and not cfg.native_subquadratic:
+            # ring mode: attention caches bounded by the serving window
+            max_seq = max(l.shape[-3] for l in leaves if l.ndim >= 3)
+            assert max_seq <= max(cfg.long_context_window, 4096 + 1)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_eval_shape_no_alloc(arch):
+    cfg = get_config(arch).replace(param_dtype="bfloat16")
+    from repro.models import build_model
+    model = build_model(cfg)
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    n = sum(int(x.size) for x in jax.tree.leaves(tree))
+    assert abs(n - cfg.param_count()) / cfg.param_count() < 0.05

@@ -1,0 +1,57 @@
+"""Validating the testable consequences of the paper's §4 theory."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.theory import (
+    coordinate_norm_test_holds, esg_constant, adam_beta_condition,
+    minimal_batch_for_coordinate_test)
+
+
+def gaussian_per_sample_grads(key, n, d, mu_scale=1.0, noise=0.1):
+    mu = mu_scale * jax.random.normal(key, (d,))
+    eps = noise * jax.random.normal(jax.random.fold_in(key, 1), (n, d))
+    return {"w": mu[None] + eps}
+
+
+def test_proposition1_esg_bound():
+    """Prop. 1: if the coordinate-wise exact-variance test holds with eta,
+    the coordinate-wise E-SG constant is <= 1 + eta^2."""
+    key = jax.random.PRNGKey(0)
+    grads = gaussian_per_sample_grads(key, n=4096, d=32, noise=0.05)
+    eta = 0.5
+    b = 64
+    if bool(coordinate_norm_test_holds(grads, eta, b)):
+        c = float(esg_constant(grads, b))
+        assert c <= 1 + eta**2 + 1e-6
+
+
+def test_minimal_batch_enforces_test():
+    key = jax.random.PRNGKey(1)
+    grads = gaussian_per_sample_grads(key, n=8192, d=16, noise=0.3)
+    eta = 0.4
+    b_star = int(minimal_batch_for_coordinate_test(grads, eta))
+    assert b_star >= 1
+    assert bool(coordinate_norm_test_holds(grads, eta, b_star))
+    if b_star > 1:
+        assert not bool(coordinate_norm_test_holds(grads, eta, max(b_star // 4, 1)))
+
+
+def test_adam_beta_condition_paper_defaults():
+    """The paper's own training betas (0.9, 0.95) VIOLATE Theorem 1's
+    sufficient condition — the constants are conservative (documented in
+    core/theory.py and DESIGN.md); the condition does hold for larger beta2."""
+    res = adam_beta_condition(0.9, 0.95, eta=0.2)
+    assert not res["holds"]
+    res2 = adam_beta_condition(0.9, 0.999, eta=0.2)
+    assert res2["holds"], res2
+
+
+@given(beta2=st.floats(0.9, 0.99999), eta=st.floats(0.01, 0.9))
+@settings(max_examples=50, deadline=None)
+def test_beta_bound_monotone_in_eta(beta2, eta):
+    b1 = adam_beta_condition(0.5, beta2, eta)["beta1_bound"]
+    b2 = adam_beta_condition(0.5, beta2, eta + 0.05)["beta1_bound"]
+    assert b2 <= b1 + 1e-12   # noisier gradients -> stricter beta1
