@@ -70,6 +70,16 @@ def _train_scheme(arch, scheme, steps, *, eta=0.2, step_impl="accum_norm",
     return us, s
 
 
+def _engine_payload(s):
+    """engine_stats columns (compiles / cache hit rate / padding waste) for
+    the benchmark rows — the tentpole's measurable recompile savings."""
+    eng = s.get("engine")
+    if not eng:
+        return {}
+    return {"compiles": eng["compiles"], "hit_rate": eng["hit_rate"],
+            "pad_waste": eng["padding_waste"]}
+
+
 def bench_table1_microllama(steps):
     """Paper Table 1: MicroLlama schemes under the norm test (CPU-scale)."""
     for scheme, eta in (("adaptive", 0.1), ("adaptive", 0.2),
@@ -79,7 +89,7 @@ def bench_table1_microllama(steps):
         us, s = _train_scheme("microllama-300m", scheme, steps, eta=eta or 0.2)
         _row(name, us, steps=s["steps"], avg_bsz=round(s["avg_batch"], 1),
              loss=round(s["best_loss"], 3), val_loss=round(s["best_val_loss"], 3),
-             time_s=round(s["wall_s"], 1))
+             time_s=round(s["wall_s"], 1), **_engine_payload(s))
 
 
 def bench_table2_tinyllama(steps):
@@ -133,7 +143,31 @@ def bench_table3_openllama(steps):
                               base_gb=8)
         _row(name, us, steps=s["steps"], avg_bsz=round(s["avg_batch"], 1),
              loss=round(s["best_loss"], 3), val_loss=round(s["best_val_loss"], 3),
-             time_s=round(s["wall_s"], 1))
+             time_s=round(s["wall_s"], 1), **_engine_payload(s))
+
+
+def bench_engine_cache(steps):
+    """Recompile savings of the bucketed engine (DESIGN §8): the same
+    adaptive 4→64 schedule with the bucket ladder on vs off, plus the
+    AOT-warmup variant.  Derived columns: traces compiled, cache hit rate,
+    padding waste, wall seconds."""
+    from repro.launch.train import TrainJob, run_training, summarize
+    for tag, ladder, warm in (("ladder_auto", "auto", False),
+                              ("ladder_auto_aot", "auto", True),
+                              ("ladder_off", "off", False)):
+        job = TrainJob(arch="llama3.2-1b", steps=min(steps, 25), seq_len=64,
+                       base_global_batch=4, max_global_batch=64,
+                       base_micro_batch=2, max_micro_batch=4, base_accum=2,
+                       eta=0.12, step_impl="accum_norm", eval_every=0,
+                       bucket_ladder=ladder, aot_warmup=warm)
+        t0 = time.time()
+        h = run_training(job)
+        s = summarize(h)
+        payload = _engine_payload(s) or {"compiles": "n/a"}
+        _row(f"engine_cache/{tag}",
+             (time.time() - t0) / max(s["steps"], 1) * 1e6,
+             steps=s["steps"], avg_bsz=round(s["avg_batch"], 1),
+             wall_s=round(s["wall_s"], 1), **payload)
 
 
 # ----------------------------------------------------- system benches ----
@@ -247,6 +281,7 @@ BENCHES = {
     "table1_microllama": bench_table1_microllama,
     "table2_tinyllama": bench_table2_tinyllama,
     "table3_openllama": bench_table3_openllama,
+    "engine_cache": bench_engine_cache,
     "norm_test_overhead": bench_norm_test_overhead,
     "norm_test_knobs": bench_norm_test_knobs,
     "kernel_micro": bench_kernel_micro,

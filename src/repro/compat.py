@@ -1,0 +1,89 @@
+"""Version shims over the moving parts of the JAX API (DESIGN §0).
+
+The repo targets the modern spelling (`jax.shard_map`, `jax.set_mesh`,
+`jax.sharding.AxisType`) but must run on whatever JAX the image bakes in
+(currently 0.4.37, which predates all three).  Every call site goes through
+this module so the rest of the codebase never branches on versions:
+
+* `make_mesh(shape, axes)`     — `jax.make_mesh`, passing `axis_types`
+                                 (all-Auto) only when the install supports it.
+* `set_mesh(mesh)`             — context manager: `jax.set_mesh` when
+                                 available, else the classic `with mesh:`
+                                 physical-mesh context (equivalent for our
+                                 usage: bare-PartitionSpec constraint
+                                 resolution + shard_map axis binding).
+* `shard_map(f, mesh=..., in_specs=..., out_specs=..., axis_names=...,
+             check_vma=...)`   — new-style keyword API; lowered onto
+                                 `jax.experimental.shard_map.shard_map` with
+                                 `auto = mesh.axis_names - axis_names` and
+                                 `check_rep = check_vma` on old installs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:  # jax >= 0.5-ish
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # 0.4.x: meshes have no axis types (everything is Auto)
+    _AxisType = None
+
+AxisType = _AxisType
+
+# Partial-auto shard_map (manual data axes + GSPMD auto model axis) is only
+# trustworthy on JAX with the native `jax.shard_map`: the 0.4.x experimental
+# `auto=` path hits an XLA "Check failed: sharding.IsManualSubgroup()" crash
+# whenever a model-sharded tensor flows through a while loop (layer scan,
+# gradient-accumulation scan, chunked-xent scan) inside the manual region.
+# Old installs therefore fall back to a FULLY-manual shard_map for the hybrid
+# train steps: parameters are all-gathered at the jit boundary and replicated
+# inside the step (numerically identical; memory-wasteful on model>1 meshes,
+# which on 0.4.x-only hosts are CPU smoke shapes — see DESIGN §0).
+PARTIAL_AUTO_OK = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """`jax.make_mesh` with all-Auto axis types where supported."""
+    if _AxisType is not None:
+        kwargs.setdefault("axis_types", (_AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Bind `mesh` as the ambient mesh for the enclosed block."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None):
+    """New-style `jax.shard_map` keyword API on any supported JAX.
+
+    `axis_names` is the set of MANUAL axes; the rest of the mesh stays under
+    GSPMD auto partitioning (old API: the complement `auto` frozenset).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {}
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma) if check_vma is not None else True,
+                      auto=auto)
+
+
+__all__ = ["AxisType", "make_mesh", "set_mesh", "shard_map"]

@@ -20,7 +20,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field, replace
 
-from repro.core.schedule import BatchPlan, round_plan
+from repro.core.schedule import BatchPlan, quantize_to_ladder, round_plan
 
 
 @dataclass(frozen=True)
@@ -35,6 +35,20 @@ class ControllerConfig:
     test_interval: int = 1
     ema: float = 0.0              # 0 = off (paper-faithful)
     monotonic: bool = True
+    # optional shape-bucket ladder (DESIGN §8): when set, every emitted plan
+    # is quantized UP onto a ladder rung, so a batch increase reuses a
+    # precompiled step instead of recompiling; None = paper-exact rounding
+    ladder: tuple[BatchPlan, ...] | None = None
+
+
+def _resolve_plan(cfg: ControllerConfig, desired: int) -> BatchPlan:
+    plan = round_plan(desired, cfg.workers, cfg.base_micro_batch,
+                      cfg.max_micro_batch, cfg.base_accum,
+                      cfg.max_global_batch)
+    if cfg.ladder:
+        plan = quantize_to_ladder(plan.global_batch, cfg.ladder,
+                                  cfg.max_global_batch)
+    return plan
 
 
 @dataclass(frozen=True)
@@ -49,9 +63,7 @@ class ControllerState:
 
 
 def init_controller(cfg: ControllerConfig) -> ControllerState:
-    plan = round_plan(cfg.base_global_batch, cfg.workers, cfg.base_micro_batch,
-                      cfg.max_micro_batch, cfg.base_accum, cfg.max_global_batch)
-    return ControllerState(plan=plan)
+    return ControllerState(plan=_resolve_plan(cfg, cfg.base_global_batch))
 
 
 def norm_test_statistic(var_l1: float, grad_sqnorm: float, eta: float) -> float:
@@ -82,14 +94,22 @@ def controller_update(cfg: ControllerConfig, state: ControllerState,
         desired = math.ceil(t_eff)
         if cfg.monotonic:
             desired = max(desired, b_k)
-        plan = round_plan(desired, cfg.workers, cfg.base_micro_batch,
-                          cfg.max_micro_batch, cfg.base_accum,
-                          cfg.max_global_batch)
+        plan = _resolve_plan(cfg, desired)
+        if cfg.monotonic and plan.global_batch < b_k:
+            plan = state.plan
         increased = plan.global_batch > b_k
+        # the reachable ceiling: the largest ladder rung the cap permits —
+        # a ladder whose top rung rounds below max_global_batch still
+        # latches there (nothing larger is eligible)
+        cap = cfg.max_global_batch
+        if cfg.ladder:
+            cap = max((p.global_batch for p in cfg.ladder
+                       if p.global_batch <= cfg.max_global_batch),
+                      default=cfg.ladder[0].global_batch)
         return ControllerState(
             plan=plan, step=step, samples=new_samples, ema_stat=ema,
             last_T=t_raw,
             num_increases=state.num_increases + int(increased),
-            at_max=plan.global_batch >= cfg.max_global_batch)
+            at_max=plan.global_batch >= min(cfg.max_global_batch, cap))
     return replace(state, step=step, samples=new_samples, ema_stat=ema,
                    last_T=t_raw)

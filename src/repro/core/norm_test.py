@@ -119,14 +119,16 @@ def accum_variance_stats(micro_grads_sq_sum, mean_grad, num_micro: int,
 
     micro_grads_sq_sum : Σ_m ‖ĝ^m‖² (f32 scalar accumulated in the scan)
     mean_grad          : the averaged gradient g
+    num_micro          : number of contributing microbatches — a static int,
+                         or a traced count under the bucketed engine's padding
+                         (fully-padded microbatches are excluded)
     """
     gsq = tree_sqnorm(mean_grad)
-    if num_micro <= 1:
-        # single microbatch -> no within-step variance signal
-        return jnp.zeros((), jnp.float32), gsq
-    v_m = (micro_grads_sq_sum - num_micro * gsq) / (num_micro - 1)
+    m = jnp.asarray(num_micro, jnp.float32)
+    v_m = (micro_grads_sq_sum - m * gsq) / jnp.maximum(m - 1, 1.0)
     v_m = jnp.maximum(v_m, 0.0)
-    var_l1 = v_m * (workers / num_micro)
+    # single microbatch -> no within-step variance signal
+    var_l1 = jnp.where(m > 1, v_m * (workers / jnp.maximum(m, 1.0)), 0.0)
     return var_l1, gsq
 
 

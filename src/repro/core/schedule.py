@@ -50,6 +50,76 @@ def round_plan(desired_global: int, workers: int, micro_batch: int,
     return BatchPlan(global_batch=gb, micro_batch=mb, accum_steps=m, workers=workers)
 
 
+# ------------------------------------------------------- bucket ladder ----
+
+def bucket_ladder(workers: int, micro_batch: int, max_micro_batch: int,
+                  base_accum: int, base_global: int,
+                  max_global: int) -> tuple[BatchPlan, ...]:
+    """Precompute the shape-bucket ladder for the bucketed step engine
+    (DESIGN §8): a geometric sequence of `BatchPlan`s whose capacities double
+    from the base plan up to (and including) the `max_global` plan.
+
+    Every rung is produced by `round_plan`, so micro-batches are the same
+    powers-of-two buckets Algorithm 1's rounding uses and M absorbs the
+    remainder.  Consecutive rungs share the micro-batch whenever possible, so
+    growing the batch usually changes only the host-side stacked-M dimension.
+    """
+    rungs: list[BatchPlan] = []
+    top = round_plan(max_global, workers, micro_batch, max_micro_batch,
+                     base_accum, max_global)
+    cap = round_plan(base_global, workers, micro_batch, max_micro_batch,
+                     base_accum, max_global).global_batch
+    while cap < top.global_batch:
+        rungs.append(round_plan(cap, workers, micro_batch, max_micro_batch,
+                                base_accum, cap))
+        cap *= 2
+    rungs.append(top)
+    # dedupe (tiny ladders can collapse) keeping capacity order
+    seen, out = set(), []
+    for p in rungs:
+        k = (p.micro_batch, p.accum_steps)
+        if k not in seen:
+            seen.add(k)
+            out.append(p)
+    return tuple(out)
+
+
+def parse_ladder(spec: str, workers: int) -> tuple[BatchPlan, ...]:
+    """Parse an explicit `--bucket-ladder` spec: 'micro:accum,micro:accum,...'
+    (capacities must be strictly increasing)."""
+    rungs = []
+    for part in spec.split(","):
+        mb, m = (int(v) for v in part.split(":"))
+        rungs.append(BatchPlan(global_batch=workers * m * mb, micro_batch=mb,
+                               accum_steps=m, workers=workers))
+    caps = [p.global_batch for p in rungs]
+    if caps != sorted(set(caps)):
+        raise ValueError(f"bucket ladder capacities must increase: {caps}")
+    return tuple(rungs)
+
+
+def quantize_to_ladder(desired_global: int, ladder: tuple[BatchPlan, ...],
+                       max_global: int | None = None) -> BatchPlan:
+    """Smallest ladder rung whose capacity covers `desired_global`.
+
+    With `max_global` set, both the request and the RESULT are capped: rungs
+    above `max_global` are ineligible (an explicit --bucket-ladder may hold
+    rungs beyond the controller's cap), so once the request exceeds the
+    largest eligible rung, that rung is returned.  Never shrinks a request an
+    eligible rung can cover.  Degenerate case — every rung above the cap —
+    falls back to the smallest rung."""
+    desired = desired_global if max_global is None else min(desired_global,
+                                                            max_global)
+    best = None
+    for plan in ladder:
+        if max_global is not None and plan.global_batch > max_global:
+            break                      # capacities ascend: rest ineligible
+        best = plan
+        if plan.global_batch >= desired:
+            return plan
+    return best if best is not None else ladder[0]
+
+
 # ------------------------------------------------------------ schedules ----
 
 class ConstantSchedule:

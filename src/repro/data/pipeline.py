@@ -110,6 +110,38 @@ def make_batch(source: TokenSource, step: int, plan: BatchPlan, seq_len: int,
     return batch
 
 
+def pad_to_bucket(batch, plan: BatchPlan, bucket: BatchPlan,
+                  pad_token: int = 0):
+    """Pad a stacked batch built for `plan` to `bucket`'s (M, B, ...) shape
+    (the bucketed engine's shape quantization, DESIGN §8).
+
+    The plan's real samples are laid row-major into the bucket's flattened
+    (M*B) slots; the tail slots get `tokens = pad_token` and `labels = -1`,
+    which the masked-mean, valid-token-weighted loss ignores exactly — padded
+    and unpadded batches produce identical loss and gradients.  Extra
+    frontend inputs (vision/audio stubs) pad with zeros.  Returns `batch`
+    unchanged when it already has the bucket's shape.
+    """
+    m_b, per_b = bucket.accum_steps, bucket.workers * bucket.micro_batch
+    m_r, per_r = plan.accum_steps, plan.workers * plan.micro_batch
+    if (m_b, per_b) == (m_r, per_r):
+        return batch
+    n_real, cap = m_r * per_r, m_b * per_b
+    assert cap >= n_real, (plan, bucket)
+    out = {}
+    for name, v in batch.items():
+        tail = v.shape[2:]
+        if name == "labels":
+            flat = np.full((cap,) + tail, -1, dtype=v.dtype)
+        elif name == "tokens":
+            flat = np.full((cap,) + tail, pad_token, dtype=v.dtype)
+        else:
+            flat = np.zeros((cap,) + tail, dtype=v.dtype)
+        flat[:n_real] = v.reshape((n_real,) + tail)
+        out[name] = flat.reshape((m_b, per_b) + tail)
+    return out
+
+
 def microbatches(batch):
     """Iterate the M leading-axis microbatches of a stacked batch."""
     m = batch["tokens"].shape[0]

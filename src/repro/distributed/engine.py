@@ -1,0 +1,201 @@
+"""Bucketed step-execution engine: recompile-free adaptive batch growth.
+
+Algorithm 1 grows the global batch mid-training; under XLA every new
+(M, micro_batch, seq) input shape retraces and recompiles the distributed
+step — minutes of stall per increase at scale, defeating the efficiency
+argument that motivates adaptive schedules.  This engine makes a
+controller-driven batch increase a dictionary lookup (full design, padding
+accounting, and cache-key scheme: DESIGN.md §8 "Bucketed step compilation"):
+
+* a precomputed **ladder** of shape buckets (`core.schedule.bucket_ladder`,
+  powers-of-two capacities consistent with `round_plan`);
+* **quantization**: a requested `BatchPlan` maps to the smallest rung whose
+  capacity covers it (never shrinking the request, clamped at `max_global`);
+* **padding**: the real samples are laid into the rung's (M, B, seq) shape
+  and the tail is filled with `labels = -1` slots, which the masked-mean,
+  valid-token-weighted loss ignores exactly (`data.pipeline.pad_to_bucket`);
+* a keyed **cache of compiled steps** — one trace per (rung, seq_len,
+  extra-input) signature for the whole run;
+* optional **ahead-of-time warmup** of the next-larger rung in a background
+  thread, overlapped with training (XLA compilation releases the GIL), so
+  the first step after an increase doesn't pay the compile either.
+
+`EngineStats` (compile count, cache hits, padding-waste fraction) threads
+through `launch/train.py` history into `benchmarks/run.py` rows so the
+recompile savings stay measurable.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import set_mesh
+from repro.core.schedule import BatchPlan, quantize_to_ladder
+
+
+@dataclass
+class EngineStats:
+    """Counters proving the cache works (emitted into benchmark rows)."""
+    compiles: int = 0          # distinct traces built (>= 1 per bucket used)
+    hits: int = 0              # steps served from the cache
+    warmups: int = 0           # buckets compiled ahead of time
+    steps: int = 0
+    real_samples: int = 0
+    padded_samples: int = 0
+    buckets_used: list = field(default_factory=list)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.steps if self.steps else 0.0
+
+    @property
+    def padding_waste(self) -> float:
+        total = self.real_samples + self.padded_samples
+        return self.padded_samples / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "compiles": self.compiles,
+            "hits": self.hits,
+            "warmups": self.warmups,
+            "steps": self.steps,
+            "hit_rate": round(self.hit_rate, 4),
+            "padding_waste": round(self.padding_waste, 4),
+            "buckets_used": list(self.buckets_used),
+        }
+
+
+def _batch_key(batch_like) -> tuple:
+    """Cache key: the full input signature (names x shapes x dtypes), so any
+    shape-relevant change — rung, seq_len, extra frontend inputs — is a new
+    entry and everything else is a guaranteed hit."""
+    return tuple(sorted(
+        (k, tuple(v.shape), str(v.dtype)) for k, v in batch_like.items()))
+
+
+def _sds(batch):
+    return {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+
+
+class BucketedEngine:
+    """Keyed cache of compiled train steps over a bucket ladder.
+
+    wrap        : the step builder from `make_fsdp_norm_step` /
+                  `make_accum_norm_step` (batch_like -> jitted step).
+    ladder      : tuple[BatchPlan] from `core.schedule.bucket_ladder`.
+    mesh        : bound while building/compiling (background threads must
+                  re-enter it; mesh contexts are thread-local).
+    params_like / opt_like : abstract step operands, only needed for
+                  `aot_warmup` (lower+compile needs the full signature).
+    """
+
+    def __init__(self, wrap, ladder: tuple[BatchPlan, ...], *, mesh=None,
+                 params_like=None, opt_like=None, aot_warmup: bool = False):
+        if not ladder:
+            raise ValueError("bucket ladder must have at least one rung")
+        self._wrap = wrap
+        self.ladder = tuple(sorted(ladder, key=lambda p: p.global_batch))
+        self._mesh = mesh
+        self._params_like = params_like
+        self._opt_like = opt_like
+        self._aot = aot_warmup and params_like is not None
+        self._cache: dict[tuple, object] = {}
+        self._lock = threading.Lock()
+        self._pool = ThreadPoolExecutor(max_workers=1) if self._aot else None
+        self._pending: dict[tuple, object] = {}   # key -> Future
+        self.stats = EngineStats()
+
+    # ------------------------------------------------------ quantization --
+
+    def bucket_for(self, desired_global: int,
+                   max_global: int | None = None) -> BatchPlan:
+        return quantize_to_ladder(desired_global, self.ladder, max_global)
+
+    def next_bucket(self, bucket: BatchPlan) -> BatchPlan | None:
+        """The next-larger rung (the AOT warmup target), or None at the top."""
+        for plan in self.ladder:
+            if plan.global_batch > bucket.global_batch:
+                return plan
+        return None
+
+    # ------------------------------------------------------------- cache --
+
+    def _mesh_ctx(self):
+        return (set_mesh(self._mesh) if self._mesh is not None
+                else contextlib.nullcontext())
+
+    def _build(self, batch_like):
+        with self._mesh_ctx():
+            return self._wrap(batch_like)
+
+    def get_step(self, batch):
+        """The compiled step for this (padded) batch's signature; traces at
+        most once per signature across the run."""
+        key = _batch_key(batch)
+        with self._lock:
+            fut = self._pending.pop(key, None)
+        if fut is not None and key not in self._cache:
+            self._cache[key] = fut.result()     # warmup finished or finishes now
+        if key in self._cache:
+            self.stats.hits += 1
+            return self._cache[key]
+        fn = self._build(_sds(batch))
+        self._cache[key] = fn
+        self.stats.compiles += 1
+        return fn
+
+    def observe(self, plan: BatchPlan, bucket: BatchPlan):
+        """Record one executed step's padding accounting."""
+        self.stats.steps += 1
+        self.stats.real_samples += plan.global_batch
+        self.stats.padded_samples += bucket.global_batch - plan.global_batch
+        tag = f"{bucket.micro_batch}x{bucket.accum_steps}"
+        if tag not in self.stats.buckets_used:
+            self.stats.buckets_used.append(tag)
+
+    # ------------------------------------------------------- AOT warmup --
+
+    def warmup(self, bucket: BatchPlan, batch_example: dict):
+        """Queue an ahead-of-time compile of `bucket` shaped like
+        `batch_example` (tail dims reused; leading dims replaced by the
+        rung's (M, B)).  No-op unless aot_warmup was enabled."""
+        if not self._aot or bucket is None:
+            return
+        batch_like = {
+            k: jax.ShapeDtypeStruct(
+                (bucket.accum_steps, bucket.workers * bucket.micro_batch)
+                + tuple(v.shape[2:]), v.dtype)
+            for k, v in batch_example.items()}
+        key = _batch_key(batch_like)
+        with self._lock:
+            if key in self._cache or key in self._pending:
+                return
+            self._pending[key] = self._pool.submit(
+                self._compile_aot, batch_like)
+        self.stats.warmups += 1
+        self.stats.compiles += 1
+
+    def _compile_aot(self, batch_like):
+        fn = self._build(batch_like)
+        with self._mesh_ctx():
+            return fn.lower(
+                self._params_like, self._opt_like, batch_like,
+                jax.ShapeDtypeStruct((), jnp.float32)).compile()
+
+    def drain(self):
+        """Block until queued warmups land in the cache (tests/teardown)."""
+        with self._lock:
+            pending = list(self._pending.items())
+        for key, fut in pending:
+            self._cache[key] = fut.result()
+            with self._lock:
+                self._pending.pop(key, None)
+
+
+__all__ = ["BucketedEngine", "EngineStats"]

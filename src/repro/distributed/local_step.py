@@ -25,7 +25,8 @@ from repro.core.norm_test import tree_sqdiff, tree_sqnorm
 from repro.optim.adamw import AdamWConfig, init_adamw, adamw_update
 from repro.distributed.params import param_pspecs
 from repro.distributed.sharding import manual_data_rules, use_sharding_rules
-from repro.distributed.train_step import _rules_for, _batch_pspec
+from repro.compat import shard_map
+from repro.distributed.train_step import _rules_for, _batch_pspec, _manual_axes
 from repro.launch.mesh import data_axes
 
 
@@ -35,7 +36,8 @@ def make_local_sgd_step(model, opt_cfg: AdamWConfig, mesh, *,
         round(params, opt_state, batch, lr) -> (params', opt', metrics)
     where batch leaves are (H, B_global, ...) — H local steps per sync."""
     daxes = data_axes(mesh)
-    rules = manual_data_rules(_rules_for(mesh), daxes)
+    manual = _manual_axes(mesh, daxes)
+    rules = manual_data_rules(_rules_for(mesh), manual)
 
     def inner(params, opt_state, batch, lr):
         with use_sharding_rules(rules, mesh):
@@ -75,7 +77,7 @@ def make_local_sgd_step(model, opt_cfg: AdamWConfig, mesh, *,
     o_specs = {"m": p_specs, "v": p_specs, "count": P()}
 
     def wrap(batch_like):
-        sm = jax.shard_map(
+        sm = shard_map(
             inner, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), params_like),
                       jax.tree.map(lambda _: P(), opt_like),
@@ -84,7 +86,7 @@ def make_local_sgd_step(model, opt_cfg: AdamWConfig, mesh, *,
                        jax.tree.map(lambda _: P(), opt_like),
                        {"loss": P(), "var_l1": P(), "grad_sqnorm": P(),
                         "aux": P(), "grad_norm": P()}),
-            axis_names=set(daxes), check_vma=False)
+            axis_names=set(manual), check_vma=False)
         if not jit:
             return sm
         ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,

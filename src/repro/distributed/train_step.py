@@ -34,7 +34,14 @@ from repro.distributed.params import param_pspecs, opt_pspecs
 from repro.distributed.sharding import (
     DEFAULT_RULES, MULTIPOD_RULES, manual_data_rules, use_sharding_rules,
     with_sequence_parallel)
+from repro.compat import PARTIAL_AUTO_OK, shard_map
 from repro.launch.mesh import data_axes, num_workers
+
+
+def _manual_axes(mesh, daxes):
+    """Manual axes for the hybrid steps: just the data axes when partial-auto
+    shard_map works, the whole mesh on old JAX (see compat.PARTIAL_AUTO_OK)."""
+    return tuple(daxes) if PARTIAL_AUTO_OK else tuple(mesh.axis_names)
 
 
 def _tree_zeros_f32(tree):
@@ -52,26 +59,40 @@ def _batch_pspec(batch_tree, daxes):
 
 def _accumulate(model, params, batch, track_micro_sqnorm: bool):
     """lax.scan over the M stacked microbatches; returns (mean grads g,
-    mean loss, mean aux, Σ_m ‖ĝ^m‖² if tracked)."""
-    m_steps = jax.tree.leaves(batch)[0].shape[0]
+    mean loss, mean aux, Σ_m ‖ĝ^m‖² if tracked, effective microbatch count).
+
+    Microbatch contributions are weighted by their VALID-TOKEN count
+    (labels >= 0), normalized by the total.  With the full, equal-sized
+    microbatches of an unpadded batch this is exactly the old uniform mean;
+    under the bucketed engine's padding (DESIGN §8) it makes padded slots —
+    whole microbatches of `labels = -1` slots or a padded tail inside one —
+    contribute nothing, so padded and unpadded batches produce identical
+    loss and gradients."""
 
     def loss_fn(p, mb):
         loss, metrics = model.loss(p, mb)
         return loss, metrics
 
     def body(carry, mb):
-        acc_g, acc_loss, acc_aux, acc_sq = carry
+        acc_g, acc_loss, acc_aux, acc_sq, acc_w, acc_m = carry
         (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
-        acc_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_g, g)
-        sq = tree_sqnorm(g) if track_micro_sqnorm else acc_sq
-        return (acc_g, acc_loss + loss, acc_aux + metrics["aux"],
-                acc_sq + sq if track_micro_sqnorm else acc_sq), None
+        w = jnp.sum(mb["labels"] >= 0).astype(jnp.float32)
+        acc_g = jax.tree.map(lambda a, b: a + w * b.astype(jnp.float32), acc_g, g)
+        if track_micro_sqnorm:
+            # fully-padded microbatches carry no gradient draw: skip them in
+            # the Σ_m ‖ĝ^m‖² used by the accumulation-variance estimator
+            acc_sq = acc_sq + jnp.where(w > 0, tree_sqnorm(g), 0.0)
+        return (acc_g, acc_loss + w * loss, acc_aux + w * metrics["aux"],
+                acc_sq, acc_w + w, acc_m + (w > 0)), None
 
     init = (_tree_zeros_f32(params), jnp.zeros((), jnp.float32),
+            jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
             jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
-    (acc_g, acc_loss, acc_aux, acc_sq), _ = jax.lax.scan(body, init, batch)
-    g = jax.tree.map(lambda x: x / m_steps, acc_g)
-    return g, acc_loss / m_steps, acc_aux / m_steps, acc_sq, m_steps
+    (acc_g, acc_loss, acc_aux, acc_sq, acc_w, acc_m), _ = \
+        jax.lax.scan(body, init, batch)
+    denom = jnp.maximum(acc_w, 1.0)
+    g = jax.tree.map(lambda x: x / denom, acc_g)
+    return g, acc_loss / denom, acc_aux / denom, acc_sq, acc_m, acc_w
 
 
 # --------------------------------------------------------- FSDP-Norm ----
@@ -83,21 +104,27 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
     """variance_impl: 'scalar' (pre-reduced 8-byte collective, DESIGN §7.1)
     or 'paper' (eq. 5 literal: all-reduce the full (g_j-g)² vector)."""
     daxes = data_axes(mesh)
+    manual = _manual_axes(mesh, daxes)
     base = _rules_for(mesh)
     if sequence_parallel:
         base = with_sequence_parallel(base)
-    rules = manual_data_rules(base, daxes)
+    rules = manual_data_rules(base, manual)
 
     def inner(params, opt_state, batch, lr):
         with use_sharding_rules(rules, mesh):
-            g_j, loss, aux, _, m_steps = _accumulate(model, params, batch, False)
-            g = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), g_j)
+            g_j, loss, aux, _, _, w_j = _accumulate(model, params, batch, False)
+            # valid-token-weighted mean over workers: equals plain pmean on
+            # unpadded batches; exact under the engine's padding even when
+            # the padded tail lands unevenly across workers (DESIGN §8)
+            w_sum = jnp.maximum(jax.lax.psum(w_j, daxes), 1.0)
+            g = jax.tree.map(
+                lambda x: jax.lax.psum(x * w_j, daxes) / w_sum, g_j)
             if variance_impl == "paper":
                 var_l1, gsq = paper_faithful_worker_variance(g_j, g, daxes)
             else:
                 var_l1, gsq = worker_variance_stats(g_j, g, daxes)
-            loss = jax.lax.pmean(loss, daxes)
-            aux = jax.lax.pmean(aux, daxes)
+            loss = jax.lax.psum(loss * w_j, daxes) / w_sum
+            aux = jax.lax.psum(aux * w_j, daxes) / w_sum
             new_params, new_opt, gnorm = adamw_update(params, g, opt_state, opt_cfg, lr)
         metrics = {"loss": loss, "aux": aux, "var_l1": var_l1,
                    "grad_sqnorm": gsq, "grad_norm": gnorm}
@@ -113,7 +140,7 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
         return _batch_pspec(batch_like, daxes)
 
     def wrap(batch_like):
-        sm = jax.shard_map(
+        sm = shard_map(
             inner, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), params_like),
                       jax.tree.map(lambda _: P(), opt_like),
@@ -122,7 +149,7 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
                        jax.tree.map(lambda _: P(), opt_like),
                        {"loss": P(), "aux": P(), "var_l1": P(),
                         "grad_sqnorm": P(), "grad_norm": P()}),
-            axis_names=set(daxes), check_vma=False)
+            axis_names=set(manual), check_vma=False)
         if not jit:
             return sm
         return jax.jit(
@@ -163,8 +190,8 @@ def make_accum_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
             batch = jax.tree.map(
                 lambda x: jax.lax.with_sharding_constraint(
                     x, P(None, daxes)) if x.ndim >= 2 else x, batch)
-            g, loss, aux, sq_sum, m_steps = _accumulate(model, params, batch, True)
-            var_l1, gsq = accum_variance_stats(sq_sum, g, m_steps, J)
+            g, loss, aux, sq_sum, m_eff, _ = _accumulate(model, params, batch, True)
+            var_l1, gsq = accum_variance_stats(sq_sum, g, m_eff, J)
             new_params, new_opt, gnorm = adamw_update(params, g, opt_state, opt_cfg, lr)
         metrics = {"loss": loss, "aux": aux, "var_l1": var_l1,
                    "grad_sqnorm": gsq, "grad_norm": gnorm}

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, get_config
 from repro.configs.shapes import INPUT_SHAPES, input_specs
+from repro.compat import set_mesh
 from repro.launch.mesh import make_production_mesh, num_workers
 from repro.launch.roofline import (
     roofline_terms, parse_collectives, model_flops_per_step)
@@ -42,7 +43,7 @@ def dryrun_config(arch: str, remat: str = "full"):
 def _compile_one(cfg, shape, mesh, step_impl: str, accum: int = 1,
                  variance_impl: str = "scalar", seqpar: bool = False):
     """Build + lower + compile the step for one config; returns compiled."""
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         return _compile_one_inner(cfg, shape, mesh, step_impl, accum,
                                   variance_impl, seqpar)
 
@@ -83,6 +84,8 @@ def _compile_one_inner(cfg, shape, mesh, step_impl: str, accum: int = 1,
 
 def _cost_and_collectives(compiled):
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jaxlib: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = parse_collectives(hlo)
     return (float(cost.get("flops", 0.0)),
@@ -100,7 +103,8 @@ def _depth_cfg(cfg, repeats: int):
 def lower_combo(arch: str, shape_name: str, multi_pod: bool,
                 step_impl: str = "fsdp_norm", calibrate: bool = True,
                 accum: int = 1, remat: str = "full",
-                variance_impl: str = "scalar", seqpar: bool = False):
+                variance_impl: str = "scalar", seqpar: bool = False,
+                bucket_ladder: str = ""):
     """Lower + compile one combination; returns (compiled, record).
 
     Three compiles: (A) the full-depth scanned model — THE deliverable proof
@@ -162,6 +166,19 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool,
         mflops = model_flops_per_step(cfg, shape, n_dev)
         rl = roofline_terms(cost, compiled.as_text(), mflops)
 
+    ladder_rec = {}
+    if bucket_ladder and shape.kind == "train":
+        # ahead-of-time compile every accumulation rung of the bucket ladder
+        # (the engine's warmup cost if the whole ladder is prebuilt)
+        for m in (int(v) for v in bucket_ladder.split(",")):
+            if m == accum or shape.global_batch % m != 0:
+                continue
+            t0m = time.time()
+            cm = _compile_one(cfg, shape, mesh, step_impl, accum=m,
+                              variance_impl=variance_impl, seqpar=seqpar)
+            ladder_rec[f"M{m}"] = round(time.time() - t0m, 1)
+            del cm
+
     record = {
         "arch": arch,
         "shape": shape_name,
@@ -177,6 +194,8 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool,
         "params_total": cfg.param_count(),
         "params_active": cfg.param_count(active_only=True),
     }
+    if ladder_rec:
+        record["bucket_ladder_compile_s"] = ladder_rec
     return compiled, record
 
 
@@ -199,6 +218,9 @@ def main(argv=None):
     p.add_argument("--accum", type=int, default=1)
     p.add_argument("--remat", default="full")
     p.add_argument("--variance-impl", default="scalar")
+    p.add_argument("--bucket-ladder", default="",
+                   help="comma list of accumulation rungs to AOT-compile, "
+                        "e.g. '1,2,4,8' (train shapes only)")
     p.add_argument("--seqpar", action="store_true")
     p.add_argument("--tag", default="")
     p.add_argument("--out", default="experiments/dryrun")
@@ -229,7 +251,8 @@ def main(argv=None):
                     compiled, rec = lower_combo(
                         arch, shape_name, mp, step_impl=args.step_impl,
                         accum=args.accum, remat=args.remat,
-                        variance_impl=args.variance_impl, seqpar=args.seqpar)
+                        variance_impl=args.variance_impl, seqpar=args.seqpar,
+                        bucket_ladder=args.bucket_ladder)
                     with open(path, "w") as f:
                         json.dump(rec, f, indent=2, default=str)
                     rl = rec["roofline"]

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.compat import set_mesh
 from repro.launch.mesh import make_host_mesh
 from repro.distributed.serve_step import make_decode_step, make_prefill
 from repro.models import build_model
@@ -38,7 +39,7 @@ def run_serving(arch: str, *, smoke=True, batch=4, prompt_len=32, gen_len=32,
     step_fn = dec_wrap(jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), cache))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         # "prefill" by streaming the prompt through decode (cache stays
         # shape-stable; production prefill uses model.prefill)
         t0 = time.time()

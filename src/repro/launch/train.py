@@ -31,9 +31,14 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.core.controller import (
     ControllerConfig, init_controller, controller_update)
-from repro.core.schedule import BatchPlan, ConstantSchedule, StagewiseSchedule, round_plan
-from repro.data.pipeline import MarkovTokens, UniformTokens, make_batch
+from repro.core.schedule import (
+    BatchPlan, ConstantSchedule, StagewiseSchedule, bucket_ladder,
+    parse_ladder, round_plan)
+from repro.data.pipeline import (
+    MarkovTokens, UniformTokens, make_batch, pad_to_bucket)
+from repro.distributed.engine import BucketedEngine
 from repro.distributed.train_step import make_fsdp_norm_step, make_accum_norm_step
+from repro.compat import set_mesh
 from repro.launch.mesh import make_host_mesh, num_workers
 from repro.models import build_model
 from repro.optim.adamw import AdamWConfig, init_adamw, warmup_cosine
@@ -72,6 +77,11 @@ class TrainJob:
     # sequence-length warmup (paper §2; GrowLength/Llama-3 style): stages of
     # (fraction_of_samples, seq_len); empty = constant job.seq_len
     seq_stages: tuple = ()
+    # bucketed step-compilation engine (DESIGN §8): 'auto' builds the
+    # powers-of-two ladder from the batch knobs; 'off' recompiles per plan
+    # (the pre-engine behavior); or an explicit 'micro:accum,micro:accum,...'
+    bucket_ladder: str = "auto"
+    aot_warmup: bool = False              # compile the next rung in background
     eval_every: int = 25
     eval_batches: int = 4
     checkpoint_dir: str = ""
@@ -109,13 +119,27 @@ def run_training(job: TrainJob) -> dict:
     else:
         wrap, _, _ = make_accum_norm_step(model, opt_cfg, mesh, params_like=params)
 
+    if job.bucket_ladder == "off":
+        ladder = None
+    elif job.bucket_ladder == "auto":
+        # the ladder must cover every plan any schedule can emit, including
+        # stagewise stages configured above max_global_batch
+        top = max(job.max_global_batch, job.base_global_batch,
+                  *([b for _, b in job.stages] if job.schedule == "stagewise"
+                    else [0]))
+        ladder = bucket_ladder(workers, job.base_micro_batch,
+                               job.max_micro_batch, job.base_accum,
+                               min(job.base_global_batch, top), top)
+    else:
+        ladder = parse_ladder(job.bucket_ladder, workers)
+
     ctrl_cfg = ControllerConfig(
         eta=job.eta, workers=workers,
         base_micro_batch=job.base_micro_batch,
         max_micro_batch=job.max_micro_batch, base_accum=job.base_accum,
         base_global_batch=job.base_global_batch,
         max_global_batch=job.max_global_batch,
-        test_interval=job.test_interval, ema=job.ema)
+        test_interval=job.test_interval, ema=job.ema, ladder=ladder)
     ctrl = init_controller(ctrl_cfg)
 
     if job.schedule == "constant":
@@ -149,7 +173,15 @@ def run_training(job: TrainJob) -> dict:
     compiled = {}
     eval_fn = {}
 
+    engine = None
+    if ladder is not None:
+        engine = BucketedEngine(wrap, ladder, mesh=mesh,
+                                params_like=_sds(params),
+                                opt_like=_sds(opt_state),
+                                aot_warmup=job.aot_warmup)
+
     def get_step(plan: BatchPlan, batch):
+        # legacy path (bucket_ladder='off'): one compile per (M, micro, seq)
         key_ = (plan.accum_steps, plan.micro_batch,
                 batch["tokens"].shape[-1])
         if key_ not in compiled:
@@ -190,7 +222,7 @@ def run_training(job: TrainJob) -> dict:
                 return sl
         return job.seq_stages[-1][1]
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         while samples < total_samples and step < job.steps:
             if schedule is not None:
                 plan = schedule.plan_for(samples, total_samples)
@@ -198,11 +230,21 @@ def run_training(job: TrainJob) -> dict:
                 plan = ctrl.plan
             seq_len = seq_len_for(samples)
             batch_np = make_batch(source, step, plan, seq_len, extra_specs)
+            if engine is not None:
+                # no max_global clamp here: the ladder top is built to cover
+                # every schedule plan, including stagewise stages configured
+                # above max_global_batch (the controller clamps its own plans)
+                bucket = engine.bucket_for(plan.global_batch)
+                batch_np = pad_to_bucket(batch_np, plan, bucket)
+                step_fn = engine.get_step(batch_np)
+                engine.observe(plan, bucket)
+                engine.warmup(engine.next_bucket(bucket), batch_np)
             batch = jax.tree.map(jnp.asarray, batch_np)
             lr = warmup_cosine(samples, peak_lr=job.peak_lr, min_lr=job.min_lr,
                                warmup_steps=warmup_samples,
                                total_steps=total_samples)
-            step_fn = get_step(plan, batch)
+            if engine is None:
+                step_fn = get_step(plan, batch)
             params, opt_state, metrics = step_fn(params, opt_state, batch, lr)
 
             var_l1 = float(metrics["var_l1"])
@@ -240,6 +282,9 @@ def run_training(job: TrainJob) -> dict:
                         metadata={"job": dataclasses.asdict(job)})
     if log_f:
         log_f.close()
+    if engine is not None:
+        engine.drain()
+        history["engine"] = engine.stats.as_dict()
     history["final_params"] = params
     return history
 
@@ -247,13 +292,18 @@ def run_training(job: TrainJob) -> dict:
 def summarize(history: dict) -> dict:
     losses = [l for l in history["loss"] if math.isfinite(l)]
     vals = [v for v in history["val_loss"] if math.isfinite(v)]
-    return {
+    out = {
         "steps": history["step"][-1] if history["step"] else 0,
         "avg_batch": float(np.mean(history["global_batch"])) if history["global_batch"] else 0,
         "best_loss": min(losses) if losses else math.nan,
         "best_val_loss": min(vals) if vals else math.nan,
         "wall_s": history["time"][-1] if history["time"] else 0.0,
     }
+    eng = history.get("engine")
+    if eng:
+        out["engine"] = {k: eng[k] for k in
+                         ("compiles", "hit_rate", "padding_waste", "warmups")}
+    return out
 
 
 def main(argv=None):

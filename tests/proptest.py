@@ -1,0 +1,108 @@
+"""Property-test shim: `hypothesis` when installed, a tiny seeded random-case
+generator otherwise.
+
+The fallback implements just the surface the suite uses —
+``@given(x=st.integers(0, 9), ...)``, ``@settings(max_examples=N,
+deadline=None)``, and the ``integers`` / ``floats`` / ``sampled_from``
+strategies — by drawing `max_examples` pseudo-random cases from a
+`numpy.random.Generator` seeded per test function name, so failures are
+reproducible on a bare interpreter with no third-party deps.
+"""
+
+from __future__ import annotations
+
+import math
+import zlib
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _Strategy:
+        def sample(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            # mix log-uniform draws with the endpoints so huge ranges still
+            # exercise small values and the boundaries (hypothesis-ish)
+            r = rng.random()
+            if r < 0.05:
+                return self.lo
+            if r < 0.10:
+                return self.hi
+            if r < 0.55 and self.hi - self.lo > 1000:
+                span = math.log(self.hi - self.lo + 1)
+                return self.lo + int(math.exp(rng.random() * span)) - 1
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi, allow_nan=False):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def sample(self, rng):
+            r = rng.random()
+            if r < 0.05:
+                return self.lo
+            if r < 0.10:
+                return self.hi
+            return self.lo + (self.hi - self.lo) * rng.random()
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng):
+            return self.options[int(rng.integers(len(self.options)))]
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, **_):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+    st = _St()
+
+    def settings(max_examples: int = 50, deadline=None, **_):
+        def deco(fn):
+            fn._proptest_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies_kw):
+        def deco(fn):
+            # NOT functools.wraps: pytest must see a zero-arg signature, not
+            # the strategy params (it would resolve them as fixtures)
+            def run(*args, **kwargs):
+                n = getattr(fn, "_proptest_max_examples", 50)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    case = {k: s.sample(rng) for k, s in strategies_kw.items()}
+                    try:
+                        fn(*args, **case, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsified on case {i} (seed {seed}): {case}"
+                        ) from e
+            for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+                setattr(run, attr, getattr(fn, attr))
+            return run
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

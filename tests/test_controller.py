@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, st
 
 from repro.core.controller import (
     ControllerConfig, init_controller, controller_update)
@@ -82,3 +82,61 @@ def test_test_interval_skips():
     assert s.plan.global_batch == 1
     s = controller_update(cfg, s, 1e9, 1.0)   # step 3: tested
     assert s.plan.global_batch > 1
+
+
+# ----------------------------------------- ladder-quantized controller ----
+
+def _ladder_cfg(workers, **kw):
+    from repro.core.schedule import bucket_ladder
+    base = dict(eta=0.15, workers=workers, base_micro_batch=2,
+                max_micro_batch=8, base_accum=2,
+                base_global_batch=2 * workers, max_global_batch=128 * workers)
+    base.update(kw)
+    cfg = ControllerConfig(**base)
+    ladder = bucket_ladder(cfg.workers, cfg.base_micro_batch,
+                           cfg.max_micro_batch, cfg.base_accum,
+                           cfg.base_global_batch, cfg.max_global_batch)
+    return ControllerConfig(**{**base, "ladder": ladder})
+
+
+@pytest.mark.parametrize("workers", [1, 2, 8])
+def test_ladder_controller_monotonic_growth(workers):
+    """monotonic=True on the ladder: global_batch never shrinks, every plan
+    is a ladder rung, and the cap holds — under an adversarial T_k stream."""
+    cfg = _ladder_cfg(workers)
+    s = init_controller(cfg)
+    rungs = {p.global_batch for p in cfg.ladder}
+    prev = s.plan.global_batch
+    stream = [1e9, 1e-9, 50.0, 1e-9, 1e9, 3.0, 1e9, 1e-9]
+    for var in stream:
+        s = controller_update(cfg, s, var_l1=var, grad_sqnorm=1.0)
+        assert s.plan.global_batch >= prev
+        assert s.plan.global_batch <= cfg.max_global_batch
+        assert s.plan.global_batch in rungs
+        prev = s.plan.global_batch
+
+
+@pytest.mark.parametrize("workers", [1, 2, 8])
+def test_ladder_controller_at_max_latches(workers):
+    cfg = _ladder_cfg(workers)
+    s = init_controller(cfg)
+    s = controller_update(cfg, s, var_l1=1e12, grad_sqnorm=1.0)
+    top = cfg.ladder[-1].global_batch
+    assert s.plan.global_batch == top and s.at_max
+    # latched: even a huge statistic no longer changes the plan
+    s2 = controller_update(cfg, s, var_l1=1e15, grad_sqnorm=1.0)
+    assert s2.plan.global_batch == top and s2.at_max
+    assert s2.last_T == s.last_T  # the test did not even run
+
+
+@pytest.mark.parametrize("workers", [1, 2, 8])
+def test_ladder_controller_test_interval_skips(workers):
+    cfg = _ladder_cfg(workers, test_interval=4)
+    s = init_controller(cfg)
+    base = s.plan.global_batch
+    for step in range(1, 4):       # steps 1-3: test skipped
+        s = controller_update(cfg, s, var_l1=1e9, grad_sqnorm=1.0)
+        assert s.plan.global_batch == base, step
+    s = controller_update(cfg, s, var_l1=1e9, grad_sqnorm=1.0)  # step 4
+    assert s.plan.global_batch > base
+    assert s.plan.global_batch in {p.global_batch for p in cfg.ladder}

@@ -1,0 +1,304 @@
+"""Bucketed step-compilation engine (DESIGN §8): compile-count regression,
+padding exactness, ladder-quantization properties, end-to-end stats."""
+import numpy as np
+import pytest
+from proptest import given, settings, st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.controller import (
+    ControllerConfig, init_controller, controller_update)
+from repro.core.schedule import (
+    BatchPlan, bucket_ladder, parse_ladder, quantize_to_ladder, round_plan)
+from repro.data.pipeline import MarkovTokens, make_batch, pad_to_bucket
+from repro.distributed.engine import BucketedEngine
+
+
+# ------------------------------------------------------------- ladder ----
+
+def test_ladder_covers_range_and_is_sorted():
+    ladder = bucket_ladder(workers=8, micro_batch=4, max_micro_batch=8,
+                           base_accum=16, base_global=256, max_global=8192)
+    caps = [p.global_batch for p in ladder]
+    assert caps == sorted(caps)
+    assert caps[0] <= 256 * 2          # base rung near the base batch
+    assert caps[-1] == round_plan(8192, 8, 4, 8, 16, 8192).global_batch
+    for p in ladder:
+        assert p.global_batch == p.workers * p.accum_steps * p.micro_batch
+        assert p.micro_batch <= 8
+
+
+def test_parse_ladder_and_rejects_nonincreasing():
+    ladder = parse_ladder("2:1,2:2,4:2,4:4", workers=2)
+    assert [p.global_batch for p in ladder] == [4, 8, 16, 32]
+    with pytest.raises(ValueError):
+        parse_ladder("4:4,2:2", workers=2)
+
+
+@given(desired=st.integers(1, 10_000_000),
+       workers=st.sampled_from([1, 2, 8]),
+       micro=st.sampled_from([1, 2, 4]), max_micro=st.sampled_from([8, 16]),
+       accum=st.sampled_from([1, 2, 16]),
+       max_global=st.sampled_from([512, 8192]))
+@settings(max_examples=200, deadline=None)
+def test_quantize_never_shrinks_and_respects_max(desired, workers, micro,
+                                                 max_micro, accum, max_global):
+    base = workers * micro
+    ladder = bucket_ladder(workers, micro, max_micro, accum, base, max_global)
+    rung = quantize_to_ladder(desired, ladder, max_global)
+    assert rung in ladder
+    top = ladder[-1].global_batch
+    # never shrinks: any request a rung can cover gets a covering rung
+    assert rung.global_batch >= min(desired, max_global, top)
+    # respects the cap: no rung exceeds max_global
+    assert rung.global_batch <= max_global
+
+
+# ------------------------------------------------------------ padding ----
+
+def _plan(gb, micro, accum, workers=1):
+    return BatchPlan(global_batch=gb, micro_batch=micro, accum_steps=accum,
+                     workers=workers)
+
+
+def test_pad_to_bucket_layout_and_mask():
+    src = MarkovTokens(vocab_size=64, seed=0)
+    plan = _plan(5, 1, 5)
+    bucket = _plan(16, 2, 8)
+    batch = make_batch(src, 0, plan, seq_len=8)
+    padded = pad_to_bucket(batch, plan, bucket)
+    assert padded["tokens"].shape == (8, 2, 8)
+    flat_lab = padded["labels"].reshape(16, 8)
+    flat_ref = batch["labels"].reshape(5, 8)
+    np.testing.assert_array_equal(flat_lab[:5], flat_ref)
+    assert (flat_lab[5:] == -1).all()          # padded slots fully masked
+    # identical bucket shape -> no-op
+    same = pad_to_bucket(batch, plan, _plan(5, 1, 5))
+    assert same is batch
+
+
+def test_padded_batch_identical_loss_and_grads():
+    """The acceptance bar: padded vs unpadded batch produce the same loss and
+    the same updated parameters to 1e-5 (accum_norm, 1-worker mesh)."""
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.launch.mesh import make_host_mesh
+    from repro.distributed.train_step import make_accum_norm_step
+    from repro.optim.adamw import AdamWConfig, init_adamw
+    from repro.compat import set_mesh
+
+    cfg = get_smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    mesh = make_host_mesh(data=1, model=1)
+    src = MarkovTokens(vocab_size=cfg.vocab_size, seed=0)
+    plan = _plan(6, 2, 3)                      # 6 real samples in 3 microbatches
+    bucket = _plan(16, 2, 8)                   # 10 padded slots, 5 empty rows
+    batch = make_batch(src, 0, plan, seq_len=16)
+    padded = pad_to_bucket(batch, plan, bucket)
+
+    outs = {}
+    for tag, b in (("plain", batch), ("padded", padded)):
+        params = model.init(jax.random.PRNGKey(0))   # fresh: steps donate args
+        opt = init_adamw(params)
+        wrap, _, _ = make_accum_norm_step(model, AdamWConfig(), mesh,
+                                          params_like=params)
+        fn = wrap(jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.tree.map(jnp.asarray, b)))
+        with set_mesh(mesh):
+            p2, _, m = fn(params, opt, jax.tree.map(jnp.asarray, b),
+                          jnp.float32(1e-3))
+        outs[tag] = (p2, m)
+
+    lp, lm = outs["plain"][1], outs["padded"][1]
+    assert abs(float(lp["loss"]) - float(lm["loss"])) < 1e-5
+    assert abs(float(lp["grad_sqnorm"]) - float(lm["grad_sqnorm"])) < 1e-4 * \
+        max(float(lp["grad_sqnorm"]), 1.0)
+    for a, b in zip(jax.tree.leaves(outs["plain"][0]),
+                    jax.tree.leaves(outs["padded"][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------- compile-count caching ----
+
+def test_one_trace_per_bucket_256_to_8192():
+    """Regression for the tentpole claim: a simulated adaptive schedule that
+    grows 256→8192 builds EXACTLY one step per ladder rung it visits; every
+    other step is a cache hit."""
+    cfg = ControllerConfig(eta=0.2, workers=8, base_micro_batch=4,
+                           max_micro_batch=8, base_accum=8,
+                           base_global_batch=256, max_global_batch=8192)
+    ladder = bucket_ladder(cfg.workers, cfg.base_micro_batch,
+                           cfg.max_micro_batch, cfg.base_accum,
+                           cfg.base_global_batch, cfg.max_global_batch)
+    cfg = ControllerConfig(**{**cfg.__dict__, "ladder": ladder})
+
+    traces = []                      # one append per engine build == trace
+
+    def counting_wrap(batch_like):
+        key = tuple(sorted((k, tuple(v.shape)) for k, v in batch_like.items()))
+        traces.append(key)
+        return lambda *a: None
+
+    engine = BucketedEngine(counting_wrap, ladder)
+    src = MarkovTokens(vocab_size=32, seed=0)
+    state = init_controller(cfg)
+    # T_k ramp: forces progressive growth through every intermediate rung
+    for step in range(60):
+        plan = state.plan
+        bucket = engine.bucket_for(plan.global_batch, cfg.max_global_batch)
+        batch = pad_to_bucket(make_batch(src, step, plan, seq_len=4),
+                              plan, bucket)
+        engine.get_step(batch)
+        engine.observe(plan, bucket)
+        t_target = min(256 * 2 ** (step // 4), 8192) * 1.5
+        state = controller_update(cfg, state, var_l1=t_target * cfg.eta**2,
+                                  grad_sqnorm=1.0)
+
+    assert state.plan.global_batch == 8192 and state.at_max
+    visited = set(engine.stats.buckets_used)
+    assert len(traces) == len(set(traces)) == len(visited), (
+        traces, visited)
+    assert engine.stats.compiles == len(visited)
+    assert engine.stats.hits == engine.stats.steps - len(visited)
+    # adaptive plans are ladder-quantized -> zero padding waste
+    assert engine.stats.padding_waste == 0.0
+    # the run climbed through multiple rungs, not just base+top
+    assert len(visited) >= 3
+
+
+def test_engine_warmup_precompiles_next_bucket():
+    """AOT warmup lands the next rung in the cache: stepping into it later is
+    a hit, not a fresh build."""
+    ladder = parse_ladder("2:1,2:2,2:4", workers=1)
+    builds = []
+
+    def counting_wrap(batch_like):
+        builds.append(tuple(v.shape for v in batch_like.values()))
+        return lambda *a: None
+
+    # fake jit object protocol for the AOT path: lower().compile()
+    class FakeJitted:
+        def lower(self, *a):
+            return self
+
+        def compile(self):
+            return lambda *a: None
+
+    def aot_wrap(batch_like):
+        builds.append(tuple(v.shape for v in batch_like.values()))
+        return FakeJitted()
+
+    engine = BucketedEngine(aot_wrap, ladder, params_like={}, opt_like={},
+                            aot_warmup=True)
+    src = MarkovTokens(vocab_size=32, seed=0)
+    plan = ladder[0]
+    batch = make_batch(src, 0, plan, seq_len=4)
+    engine.get_step(batch)
+    engine.warmup(engine.next_bucket(plan), batch)
+    engine.drain()
+    assert engine.stats.warmups == 1 and len(builds) == 2
+    # stepping into the warmed rung: served from cache, no third build
+    plan2 = ladder[1]
+    batch2 = pad_to_bucket(make_batch(src, 1, plan2, seq_len=4), plan2, plan2)
+    before = engine.stats.hits
+    engine.get_step(batch2)
+    assert len(builds) == 2 and engine.stats.hits == before + 1
+
+
+def test_run_training_engine_stats_end_to_end():
+    """The engine threads through launch/train.py: an adaptive run reports
+    compiles == buckets used, and a new seq_len bucket is a new compile."""
+    from repro.launch.train import TrainJob, run_training
+    job = TrainJob(arch="llama3.2-1b", steps=8, seq_len=32,
+                   base_global_batch=4, max_global_batch=16,
+                   base_micro_batch=2, max_micro_batch=2, base_accum=2,
+                   eta=0.12, step_impl="accum_norm", eval_every=0)
+    h = run_training(job)
+    eng = h["engine"]
+    assert eng["steps"] == 8
+    assert eng["compiles"] == len(eng["buckets_used"])
+    assert eng["hits"] == eng["steps"] - eng["compiles"]
+    assert all(np.isfinite(l) for l in h["loss"])
+
+
+def test_padded_batch_identical_grads_fsdp_multiworker(subproc):
+    """Padding that lands unevenly across the J workers still yields the
+    unpadded loss/params: the per-worker means are valid-token weighted
+    before the cross-worker reduction (DESIGN §8)."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.compat import set_mesh
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.launch.mesh import make_host_mesh
+from repro.distributed.train_step import make_fsdp_norm_step
+from repro.optim.adamw import AdamWConfig, init_adamw
+from repro.data.pipeline import MarkovTokens, make_batch, pad_to_bucket
+from repro.core.schedule import BatchPlan
+
+cfg = get_smoke_config("llama3.2-1b")
+model = build_model(cfg)
+mesh = make_host_mesh(data=2, model=1)
+src = MarkovTokens(vocab_size=cfg.vocab_size, seed=0)
+plan = BatchPlan(global_batch=6, micro_batch=3, accum_steps=1, workers=2)
+bucket = BatchPlan(global_batch=16, micro_batch=4, accum_steps=2, workers=2)
+batch = make_batch(src, 0, plan, 16)
+padded = pad_to_bucket(batch, plan, bucket)
+# row-major fill of 6 reals into (2, 8): row0 = 6 real + 2 pad, so worker 0
+# holds 4 real and worker 1 holds 2 real + 2 pad -> uneven by construction
+outs = {}
+for tag, b in (("plain", batch), ("padded", padded)):
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw(params)
+    wrap, _, _ = make_fsdp_norm_step(model, AdamWConfig(), mesh,
+                                     params_like=params)
+    jb = jax.tree.map(jnp.asarray, b)
+    fn = wrap(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), jb))
+    with set_mesh(mesh):
+        p2, _, m = fn(params, opt, jb, jnp.float32(1e-3))
+    outs[tag] = (p2, float(m["loss"]))
+assert abs(outs["plain"][1] - outs["padded"][1]) < 1e-5, outs
+for a, b in zip(jax.tree.leaves(outs["plain"][0]),
+                jax.tree.leaves(outs["padded"][0])):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=1e-5, atol=1e-5)
+print("FSDP_PAD_OK")
+""", devices=2)
+    assert "FSDP_PAD_OK" in out
+
+
+def test_stagewise_stage_above_max_global_trains():
+    """Regression: a stagewise stage configured above max_global_batch must
+    ride the auto ladder's extended top rung, not crash in pad_to_bucket."""
+    from repro.launch.train import TrainJob, run_training
+    job = TrainJob(arch="llama3.2-1b", schedule="stagewise",
+                   stages=((0.25, 8), (0.75, 32)), steps=8, total_samples=64,
+                   seq_len=16, base_global_batch=4, max_global_batch=16,
+                   base_micro_batch=2, max_micro_batch=2, base_accum=2,
+                   step_impl="accum_norm", eval_every=0)
+    h = run_training(job)
+    assert max(h["global_batch"]) == 32       # the above-cap stage executed
+    assert all(np.isfinite(l) for l in h["loss"])
+
+
+def test_explicit_ladder_rungs_above_cap_are_ineligible():
+    """Regression: quantization never hands the controller a rung above
+    max_global_batch, even from an explicit over-provisioned ladder."""
+    ladder = parse_ladder("2:1,2:24,2:48", workers=1)   # rungs 2, 48, 96
+    rung = quantize_to_ladder(10_000, ladder, max_global=64)
+    assert rung.global_batch == 48             # largest eligible, not 96
+
+    cfg = ControllerConfig(eta=0.5, workers=1, base_micro_batch=2,
+                           max_micro_batch=2, base_accum=1,
+                           base_global_batch=2, max_global_batch=64,
+                           ladder=ladder)
+    s = init_controller(cfg)
+    s = controller_update(cfg, s, var_l1=1e12, grad_sqnorm=1.0)
+    assert s.plan.global_batch == 48 and s.at_max   # latched at the ceiling
+    s2 = controller_update(cfg, s, var_l1=1e15, grad_sqnorm=1.0)
+    assert s2.plan.global_batch == 48

@@ -7,6 +7,7 @@ import pytest
 def test_local_sgd_round_and_divergence_signal(subproc):
     out = subproc("""
 import jax, jax.numpy as jnp
+from repro.compat import set_mesh
 from repro.configs import get_smoke_config
 from repro.models import build_model
 from repro.launch.mesh import make_host_mesh
@@ -29,7 +30,7 @@ bs = [make_batch(src, s, plan, 16) for s in range(H)]
 batch = {k: jnp.asarray(np.stack([b[k][0] for b in bs])) for k in bs[0]}
 wrap, _, _ = make_local_sgd_step(model, AdamWConfig(), mesh, params_like=params)
 rnd = wrap(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     p2, o2, m = rnd(params, opt, batch, jnp.float32(5e-3))
 assert all(bool(jnp.isfinite(v)) for v in jax.tree.leaves(m)), m
 # workers saw different data for H steps -> replicas diverged -> signal > 0
@@ -39,7 +40,7 @@ assert float(m["grad_sqnorm"]) > 0
 # must produce zero divergence
 same = {k: jnp.asarray(np.stack([np.tile(b[k][0][:2], (4,1)) for b in bs])) for k in bs[0]}
 rnd2 = wrap(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), same))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     p3, o3, m2 = rnd2(p2, o2, same, jnp.float32(5e-3))
 assert float(m2["var_l1"]) < 1e-8 * max(float(m2["grad_sqnorm"]), 1e-9), m2
 print("LOCAL_OK", float(m["var_l1"]), float(m2["var_l1"]))

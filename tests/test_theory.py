@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, st
 
 from repro.core.theory import (
     coordinate_norm_test_holds, esg_constant, adam_beta_condition,
