@@ -40,6 +40,12 @@ def _row(name, us_per_call, **derived):
     print(f"{name},{us_per_call:.1f},{payload}", flush=True)
 
 
+# Per-step perf trajectory, written to --json-out (BENCH_step.json) so the
+# numbers are tracked PR-over-PR: stats-path tail timings (tree vs flat,
+# DESIGN §9) and per-step wall clock per engine bucket.
+BENCH_JSON: dict = {}
+
+
 # ------------------------------------------------------------ tables ----
 
 def _train_scheme(arch, scheme, steps, *, eta=0.2, step_impl="accum_norm",
@@ -172,6 +178,145 @@ def bench_engine_cache(steps):
 
 # ----------------------------------------------------- system benches ----
 
+def _flat_bench_tree(d: int, layers: int):
+    """Transformer-like gradient pytree (deep-narrow shapes hit the
+    leaf-count regime the flat path targets)."""
+    t = {"embed": jnp.zeros((1024, d))}
+    for i in range(layers):
+        t[f"layer{i}"] = {
+            "qkv": jnp.zeros((d, 3 * d)), "o": jnp.zeros((d, d)),
+            "mlp_in": jnp.zeros((d, 4 * d)), "mlp_out": jnp.zeros((4 * d, d)),
+            "ln1": jnp.zeros((d,)), "ln2": jnp.zeros((d,)),
+        }
+    return t
+
+
+def _bench_pair(fa, aa, fb, ab, reps=6):
+    """Interleaved timing (this box is noisy): returns (us_a, us_b)."""
+    jax.block_until_ready(fa(*aa))
+    jax.block_until_ready(fb(*ab))
+    ta = tb = 0.0
+    for _ in range(reps):
+        t0 = time.time(); jax.block_until_ready(fa(*aa)); ta += time.time() - t0
+        t0 = time.time(); jax.block_until_ready(fb(*ab)); tb += time.time() - t0
+    return ta / reps * 1e6, tb / reps * 1e6
+
+
+def bench_flat_stats(steps):
+    """DESIGN §9 microbenchmark: the per-step statistics+update tail on its
+    native layout — leaf-by-leaf pytree walk (tree) vs bucketed flat buffers
+    + fused single-pass kernels (flat).  Rows land in the CSV and in
+    BENCH_step.json['stats_path']; the grad-packing overhead (what a step
+    pays to enter the flat layout when gradients arrive as a pytree) is
+    measured separately and never hidden inside the tail numbers."""
+    from repro.core.norm_test import tree_sqdiff, tree_sqnorm
+    from repro.distributed.flatbuf import FlatLayout
+    from repro.kernels import ops
+    from repro.optim.adamw import (
+        AdamWConfig, init_adamw, adamw_update, adamw_update_buffers,
+        flat_opt_state)
+
+    tiny = bool(os.environ.get("BENCH_TINY"))
+    shapes = ((("tiny_0.2M", 64, 4),) if tiny else
+              (("deep_19M", 128, 96), ("wide_13M", 512, 4)))
+    cfg = AdamWConfig()
+    reps = 3 if tiny else 6
+
+    def randlike(seed, tree):
+        leaves, td = jax.tree.flatten(tree)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+        return td.unflatten([jax.random.normal(k, l.shape)
+                             for k, l in zip(keys, leaves)])
+
+    for tag, d, layers in shapes:
+        like = _flat_bench_tree(d, layers)
+        n = sum(x.size for x in jax.tree.leaves(like))
+        params = randlike(0, like)
+        gj, g = randlike(1, like), randlike(2, like)
+        state = init_adamw(params)
+        state["m"] = randlike(3, like)
+        state["v"] = jax.tree.map(jnp.abs, randlike(4, like))
+        layout = FlatLayout.from_tree(params)
+        pb, gjb, gb = (layout.flatten(t) for t in (params, gj, g))
+        fstate = flat_opt_state(params, state)
+        mb, vb = list(fstate["m"]), list(fstate["v"])
+        lr, count = jnp.float32(1e-3), state["count"]
+
+        def tree_tail(params, gj, g, m, v, lr):
+            var = tree_sqdiff(gj, g)
+            gsq = tree_sqnorm(g)
+            st = {"m": m, "v": v, "count": count}
+            p2, st2, gn = adamw_update(params, g, st, cfg, lr)
+            return var, gsq, gn, p2, st2
+
+        def flat_tail(pb, gjb, gb, mb, vb, lr):
+            var = gsq = jnp.zeros((), jnp.float32)
+            for a, b in zip(gjb, gb):
+                dd, qq = ops.stats_flat(a, b)
+                var += dd
+                gsq += qq
+            out = adamw_update_buffers(pb, gb, mb, vb, cfg, lr, count,
+                                       grad_sqnorm=gsq)
+            return (var, gsq) + tuple(out)
+
+        tree_us, flat_us = _bench_pair(
+            jax.jit(tree_tail), (params, gj, g, state["m"], state["v"], lr),
+            jax.jit(flat_tail), (pb, gjb, gb, mb, vb, lr), reps=reps)
+        pack = jax.jit(layout.flatten)
+        jax.block_until_ready(pack(g))
+        t0 = time.time()
+        for _ in range(reps):
+            out = pack(g)
+        jax.block_until_ready(out)
+        pack_us = (time.time() - t0) / reps * 1e6
+
+        entry = {"params": n, "leaves": layout.num_leaves,
+                 "buckets": layout.num_buffers,
+                 "tree_us": round(tree_us, 1), "flat_us": round(flat_us, 1),
+                 "speedup": round(tree_us / max(flat_us, 1e-9), 3),
+                 "pack_grads_us": round(pack_us, 1)}
+        BENCH_JSON.setdefault("stats_path", {})[tag] = entry
+        _row(f"flat_stats/{tag}/tree", tree_us, params=n,
+             leaves=layout.num_leaves)
+        _row(f"flat_stats/{tag}/flat", flat_us, params=n,
+             buckets=layout.num_buffers, speedup=entry["speedup"],
+             pack_us=round(pack_us, 1))
+
+    _bench_step_per_bucket(4 if tiny else min(steps, 12))
+
+
+def _bench_step_per_bucket(nsteps):
+    """Per-step wall clock per engine bucket, tree vs flat stats path, from
+    short adaptive ACCUM-NORM runs — the engine/bucket half of
+    BENCH_step.json."""
+    from repro.launch.train import TrainJob, run_training
+
+    out = {}
+    for stats_impl in ("tree", "flat"):
+        job = TrainJob(arch="llama3.2-1b", steps=nsteps, seq_len=32,
+                       base_global_batch=4, max_global_batch=16,
+                       base_micro_batch=2, max_micro_batch=2, base_accum=2,
+                       eta=0.12, step_impl="accum_norm",
+                       stats_impl=stats_impl, eval_every=0)
+        h = run_training(job)
+        times, batches = h["time"], h["global_batch"]
+        dts = [times[0]] + [b - a for a, b in zip(times, times[1:])]
+        buckets: dict = {}
+        seen = set()
+        for gb, dt in zip(batches, dts):
+            if gb not in seen:        # first step per bucket pays the compile
+                seen.add(gb)
+                continue
+            buckets.setdefault(str(gb), []).append(dt)
+        out[stats_impl] = {
+            k: {"steps": len(v), "mean_us": round(sum(v) / len(v) * 1e6, 1)}
+            for k, v in sorted(buckets.items(), key=lambda kv: int(kv[0]))}
+        for k, e in out[stats_impl].items():
+            _row(f"flat_stats/step_bucket{k}/{stats_impl}", e["mean_us"],
+                 steps=e["steps"])
+    BENCH_JSON["step_per_bucket"] = out
+
+
 def bench_norm_test_overhead(steps):
     """us/call of the eq.(5) reduction at increasing gradient sizes, plus
     step-time overhead of test_interval=1 vs no testing."""
@@ -282,6 +427,7 @@ BENCHES = {
     "table2_tinyllama": bench_table2_tinyllama,
     "table3_openllama": bench_table3_openllama,
     "engine_cache": bench_engine_cache,
+    "flat_stats": bench_flat_stats,
     "norm_test_overhead": bench_norm_test_overhead,
     "norm_test_knobs": bench_norm_test_knobs,
     "kernel_micro": bench_kernel_micro,
@@ -293,12 +439,18 @@ def main(argv=None) -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None)
     p.add_argument("--steps", type=int, default=40)
+    p.add_argument("--json-out", default="BENCH_step.json",
+                   help="where the per-step perf trajectory JSON lands")
     args = p.parse_args(argv)
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only != name:
             continue
         fn(args.steps)
+    if BENCH_JSON and args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(BENCH_JSON, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":

@@ -91,6 +91,27 @@ def worker_variance_stats(local_grad, mean_grad, data_axes, *, sqdiff_fn=None):
     return var_l1, gsq
 
 
+def worker_variance_stats_flat(local_grad, mean_grad, data_axes):
+    """Flat-buffer variant of `worker_variance_stats` (DESIGN §9): both trees
+    are packed into a few dtype-homogeneous buckets and the fused-stats
+    kernel computes ‖g_j − g‖² AND ‖g‖² in ONE read of each bucket —
+    replacing the sqdiff + sqnorm double pass with a single-pass pair.
+    Same 8-byte pre-reduced collective as the tree path."""
+    from repro.distributed.flatbuf import FlatLayout
+    from repro.kernels import ops
+    layout = FlatLayout.from_tree(mean_grad)
+    local_b = layout.flatten(local_grad)
+    mean_b = layout.flatten(mean_grad)
+    local_sq = jnp.zeros((), jnp.float32)
+    gsq = jnp.zeros((), jnp.float32)
+    for lb, mb in zip(local_b, mean_b):
+        d, q = ops.stats_flat(lb, mb)
+        local_sq += d
+        gsq += q
+    var_l1 = jax.lax.pmean(local_sq, data_axes)
+    return var_l1, gsq
+
+
 def paper_faithful_worker_variance(local_grad, mean_grad, data_axes):
     """The paper's literal formulation: all-reduce the full (g_j − g)² vector
     (eq. 5 computes Var̂ as a d-vector, then takes ‖·‖₁).  Mathematically
@@ -108,7 +129,7 @@ def paper_faithful_worker_variance(local_grad, mean_grad, data_axes):
 # --------------------------------------------- beyond-paper ACCUM-NORM ----
 
 def accum_variance_stats(micro_grads_sq_sum, mean_grad, num_micro: int,
-                         workers: int):
+                         workers: int, *, gsq=None):
     """Estimate the per-*minibatch* gradient variance from the M accumulation
     microbatch gradients (already data-axis averaged under GSPMD).
 
@@ -122,8 +143,11 @@ def accum_variance_stats(micro_grads_sq_sum, mean_grad, num_micro: int,
     num_micro          : number of contributing microbatches — a static int,
                          or a traced count under the bucketed engine's padding
                          (fully-padded microbatches are excluded)
+    gsq                : precomputed ‖g‖² (e.g. the flat AdamW kernel's
+                         byproduct, DESIGN §9) — skips the tree_sqnorm pass
     """
-    gsq = tree_sqnorm(mean_grad)
+    if gsq is None:
+        gsq = tree_sqnorm(mean_grad)
     m = jnp.asarray(num_micro, jnp.float32)
     v_m = (micro_grads_sq_sum - m * gsq) / jnp.maximum(m - 1, 1.0)
     v_m = jnp.maximum(v_m, 0.0)

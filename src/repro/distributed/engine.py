@@ -41,10 +41,15 @@ from repro.core.schedule import BatchPlan, quantize_to_ladder
 
 @dataclass
 class EngineStats:
-    """Counters proving the cache works (emitted into benchmark rows)."""
+    """Counters proving the cache works (emitted into benchmark rows).
+
+    `compiles`/`warmups` count COMPLETED builds only — a queued background
+    warmup increments them when (and only when) its compile succeeds;
+    failures land in `warmup_failures` and are re-raised by `drain()`."""
     compiles: int = 0          # distinct traces built (>= 1 per bucket used)
     hits: int = 0              # steps served from the cache
     warmups: int = 0           # buckets compiled ahead of time
+    warmup_failures: int = 0   # background compiles that raised
     steps: int = 0
     real_samples: int = 0
     padded_samples: int = 0
@@ -64,6 +69,7 @@ class EngineStats:
             "compiles": self.compiles,
             "hits": self.hits,
             "warmups": self.warmups,
+            "warmup_failures": self.warmup_failures,
             "steps": self.steps,
             "hit_rate": round(self.hit_rate, 4),
             "padding_waste": round(self.padding_waste, 4),
@@ -109,6 +115,7 @@ class BucketedEngine:
         self._lock = threading.Lock()
         self._pool = ThreadPoolExecutor(max_workers=1) if self._aot else None
         self._pending: dict[tuple, object] = {}   # key -> Future
+        self._warmup_errors: list[Exception] = []
         self.stats = EngineStats()
 
     # ------------------------------------------------------ quantization --
@@ -136,19 +143,31 @@ class BucketedEngine:
 
     def get_step(self, batch):
         """The compiled step for this (padded) batch's signature; traces at
-        most once per signature across the run."""
+        most once per signature across the run.  A background warmup that
+        failed is recorded (surfaced later by `drain()`) and the step falls
+        back to a synchronous build."""
         key = _batch_key(batch)
         with self._lock:
             fut = self._pending.pop(key, None)
         if fut is not None and key not in self._cache:
-            self._cache[key] = fut.result()     # warmup finished or finishes now
+            try:
+                self._cache[key] = fut.result()  # warmup finished or finishes now
+            except Exception as e:               # noqa: BLE001 — surfaced in drain()
+                self._record_warmup_failure(e)
         if key in self._cache:
-            self.stats.hits += 1
+            with self._lock:   # background _compile_aot mutates stats too
+                self.stats.hits += 1
             return self._cache[key]
         fn = self._build(_sds(batch))
         self._cache[key] = fn
-        self.stats.compiles += 1
+        with self._lock:
+            self.stats.compiles += 1
         return fn
+
+    def _record_warmup_failure(self, exc: Exception):
+        with self._lock:
+            self.stats.warmup_failures += 1
+            self._warmup_errors.append(exc)
 
     def observe(self, plan: BatchPlan, bucket: BatchPlan):
         """Record one executed step's padding accounting."""
@@ -164,7 +183,11 @@ class BucketedEngine:
     def warmup(self, bucket: BatchPlan, batch_example: dict):
         """Queue an ahead-of-time compile of `bucket` shaped like
         `batch_example` (tail dims reused; leading dims replaced by the
-        rung's (M, B)).  No-op unless aot_warmup was enabled."""
+        rung's (M, B)).  No-op unless aot_warmup was enabled.
+
+        Stats accounting happens on COMPLETION inside the worker: a queued
+        compile that later fails contributes to `warmup_failures`, never to
+        `warmups`/`compiles`."""
         if not self._aot or bucket is None:
             return
         batch_like = {
@@ -178,24 +201,43 @@ class BucketedEngine:
                 return
             self._pending[key] = self._pool.submit(
                 self._compile_aot, batch_like)
-        self.stats.warmups += 1
-        self.stats.compiles += 1
 
     def _compile_aot(self, batch_like):
         fn = self._build(batch_like)
         with self._mesh_ctx():
-            return fn.lower(
+            compiled = fn.lower(
                 self._params_like, self._opt_like, batch_like,
                 jax.ShapeDtypeStruct((), jnp.float32)).compile()
+        with self._lock:     # success: count the finished warmup
+            self.stats.warmups += 1
+            self.stats.compiles += 1
+        return compiled
 
-    def drain(self):
-        """Block until queued warmups land in the cache (tests/teardown)."""
+    def drain(self, raise_errors: bool = True):
+        """Block until queued warmups land in the cache (tests/teardown).
+
+        Warmup exceptions — both ones recorded earlier by `get_step`'s
+        fallback and ones surfacing now — are re-raised here (first one,
+        with the failure count) instead of being swallowed into cache
+        entries.  Pass raise_errors=False to only record them in
+        `stats.warmup_failures` (the training loop does this: a failed
+        warmup already fell back to a synchronous compile)."""
         with self._lock:
             pending = list(self._pending.items())
         for key, fut in pending:
-            self._cache[key] = fut.result()
+            try:
+                self._cache[key] = fut.result()
+            except Exception as e:               # noqa: BLE001
+                self._record_warmup_failure(e)
             with self._lock:
                 self._pending.pop(key, None)
+        with self._lock:
+            errors, count = list(self._warmup_errors), self.stats.warmup_failures
+            self._warmup_errors = []
+        if errors and raise_errors:
+            raise RuntimeError(
+                f"{count} AOT warmup compile(s) failed; first error follows"
+            ) from errors[0]
 
 
 __all__ = ["BucketedEngine", "EngineStats"]

@@ -1,0 +1,155 @@
+"""Flat gradient buffers: dtype-homogeneous bucketed views of a pytree
+(DESIGN §9 "Flat gradient buffers & single-pass statistics").
+
+The per-step statistics+update tail (norm-test reductions + AdamW) used to
+walk the gradient/param/moment pytrees leaf-by-leaf: O(leaves) kernel
+launches / XLA ops per step, and each statistic its own full pass over
+gradient-sized data.  `FlatLayout` precomputes a static packing of the tree
+into a few contiguous buffers so the whole tail runs as a handful of fused
+kernels instead:
+
+* leaves are grouped by **dtype** (a buffer is dtype-homogeneous — mixed
+  f32/bf16 params never share a buffer);
+* each group is split into **buckets** of ~`bucket_bytes` (PyTorch-DDP
+  style): the op count scales with total bytes, not leaf count, while
+  buckets stay small enough that XLA/CPU can still schedule them
+  concurrently and a TPU grid covers each with one launch;
+* every leaf records a static `(buffer_index, offset, size, shape)` slot, so
+  `flatten`/`unflatten` are pure reshape+concat/slice — bit-exact round
+  trips, no dtype casts.
+
+The layout is a trace-time Python object (shapes/dtypes only): build it from
+concrete arrays or `ShapeDtypeStruct`s, reuse it across congruent trees
+(grads, moments, params of the same structure).  Gradients produced by the
+train steps are all-f32 regardless of param dtype — they flatten through the
+same slots into f32 buffers; `flatten` only requires each *bucket's* leaves
+to agree on the dtype of the tree actually being flattened.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# ~4 MiB of f32 per bucket: big enough that per-op dispatch overhead
+# vanishes, small enough for concurrent scheduling and VMEM-friendly grids.
+DEFAULT_BUCKET_BYTES = 4 << 20
+
+
+@dataclass(frozen=True)
+class Slot:
+    """Where one leaf lives: `buffer[offset:offset+size].reshape(shape)`."""
+    leaf_index: int          # position in jax.tree.flatten order
+    buffer_index: int
+    offset: int
+    size: int
+    shape: tuple
+
+
+class FlatLayout:
+    """Static packing of a pytree into dtype-homogeneous bucketed buffers."""
+
+    def __init__(self, treedef, slots, buffer_sizes, buffer_dtypes):
+        self.treedef = treedef
+        self.slots = tuple(slots)                  # ordered by leaf_index
+        self.buffer_sizes = tuple(buffer_sizes)
+        self.buffer_dtypes = tuple(buffer_dtypes)  # the layout tree's dtypes
+        self.num_buffers = len(buffer_sizes)
+        self.num_leaves = len(self.slots)
+        self.total_size = sum(buffer_sizes)
+
+    @classmethod
+    def from_tree(cls, tree, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+        """Build from concrete arrays or ShapeDtypeStructs.  Leaves are
+        packed first-seen-dtype-major, then greedily into buckets that close
+        once they reach `bucket_bytes` (a single oversized leaf is its own
+        bucket — leaves never straddle buckets)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        by_dtype: dict = {}
+        for i, leaf in enumerate(leaves):
+            by_dtype.setdefault(jnp.dtype(leaf.dtype), []).append(i)
+
+        slots = {}
+        sizes, dtypes = [], []
+        for dt, idxs in by_dtype.items():
+            target = max(1, bucket_bytes // max(dt.itemsize, 1))
+            cur_off = 0
+            for i in idxs:
+                size = math.prod(leaves[i].shape) if leaves[i].shape else 1
+                if cur_off and cur_off + size > target:
+                    sizes.append(cur_off)
+                    dtypes.append(dt)
+                    cur_off = 0
+                if cur_off == 0:
+                    buf_idx = len(sizes)
+                slots[i] = Slot(i, buf_idx, cur_off, size,
+                                tuple(leaves[i].shape))
+                cur_off += size
+            if cur_off:
+                sizes.append(cur_off)
+                dtypes.append(dt)
+        ordered = [slots[i] for i in range(len(leaves))]
+        return cls(treedef, ordered, sizes, dtypes)
+
+    # ------------------------------------------------------------ pack ----
+
+    def flatten(self, tree):
+        """Pack a congruent tree into its buffers (list of 1-D arrays).
+
+        Buffer dtype is taken from the tree being flattened, not the layout
+        tree — e.g. f32 gradients of bf16 params pack into f32 buffers
+        through the bf16 layout's slots.  All leaves landing in one bucket
+        must agree on dtype."""
+        leaves = jax.tree.leaves(tree)
+        if len(leaves) != self.num_leaves:
+            raise ValueError(
+                f"tree has {len(leaves)} leaves, layout expects {self.num_leaves}")
+        parts: list = [[] for _ in range(self.num_buffers)]
+        for slot, leaf in zip(self.slots, leaves):
+            if tuple(leaf.shape) != slot.shape:
+                raise ValueError(
+                    f"leaf {slot.leaf_index} shape {tuple(leaf.shape)} != "
+                    f"layout shape {slot.shape}")
+            parts[slot.buffer_index].append((slot.offset, leaf))
+        buffers = []
+        for bi, plist in enumerate(parts):
+            plist.sort(key=lambda t: t[0])
+            ravels = [jnp.ravel(leaf) for _, leaf in plist]
+            if len({r.dtype for r in ravels}) != 1:
+                raise ValueError(
+                    f"buffer {bi} mixes dtypes {sorted({str(r.dtype) for r in ravels})}")
+            buffers.append(ravels[0] if len(ravels) == 1
+                           else jnp.concatenate(ravels))
+        return buffers
+
+    def unflatten(self, buffers):
+        """Inverse of `flatten`: slice each leaf back out (bit-exact)."""
+        if len(buffers) != self.num_buffers:
+            raise ValueError(
+                f"got {len(buffers)} buffers, layout expects {self.num_buffers}")
+        for bi, (buf, size) in enumerate(zip(buffers, self.buffer_sizes)):
+            if buf.size != size:
+                raise ValueError(
+                    f"buffer {bi} has {buf.size} elements, layout expects {size}")
+        leaves = [
+            buffers[s.buffer_index][s.offset:s.offset + s.size].reshape(s.shape)
+            for s in self.slots]
+        return self.treedef.unflatten(leaves)
+
+    # --------------------------------------------------------- helpers ----
+
+    def zeros(self, dtype=jnp.float32):
+        """Fresh zero buffers (moment-state initialization)."""
+        return [jnp.zeros((n,), dtype) for n in self.buffer_sizes]
+
+
+def flatten_tree(tree, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """One-shot convenience: (layout, buffers)."""
+    layout = FlatLayout.from_tree(tree, bucket_bytes)
+    return layout, layout.flatten(tree)
+
+
+__all__ = ["FlatLayout", "Slot", "flatten_tree", "DEFAULT_BUCKET_BYTES"]

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 
-from repro.core.norm_test import tree_sqdiff, tree_sqnorm
+from repro.core.norm_test import (
+    tree_sqdiff, tree_sqnorm, worker_variance_stats_flat)
 from repro.optim.adamw import AdamWConfig, init_adamw, adamw_update
 from repro.distributed.params import param_pspecs
 from repro.distributed.sharding import manual_data_rules, use_sharding_rules
@@ -31,10 +32,17 @@ from repro.launch.mesh import data_axes
 
 
 def make_local_sgd_step(model, opt_cfg: AdamWConfig, mesh, *,
+                        stats_impl: str = "tree",
                         params_like=None, jit: bool = True):
     """Returns wrap(batch_like) -> jitted round function:
         round(params, opt_state, batch, lr) -> (params', opt', metrics)
-    where batch leaves are (H, B_global, ...) — H local steps per sync."""
+    where batch leaves are (H, B_global, ...) — H local steps per sync.
+
+    stats_impl='flat' computes the update-divergence statistic (‖Δ_j − Δ‖²
+    and ‖Δ‖²) via the single-pass fused kernel over bucketed flat buffers
+    (DESIGN §9) instead of the leaf-by-leaf sqdiff + sqnorm double pass."""
+    if stats_impl not in ("tree", "flat"):
+        raise ValueError(f"stats_impl must be 'tree' or 'flat', got {stats_impl!r}")
     daxes = data_axes(mesh)
     manual = _manual_axes(mesh, daxes)
     rules = manual_data_rules(_rules_for(mesh), manual)
@@ -55,8 +63,13 @@ def make_local_sgd_step(model, opt_cfg: AdamWConfig, mesh, *,
                 lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
                 p_j, params)
             delta = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), delta_j)
-            var_l1 = jax.lax.pmean(tree_sqdiff(delta_j, delta), daxes)
-            dsq = tree_sqnorm(delta)
+            if stats_impl == "flat":
+                # fused single-pass pair over bucketed flat buffers: pmean of
+                # the local scalar + ‖Δ‖², one read of Δ_j and Δ
+                var_l1, dsq = worker_variance_stats_flat(delta_j, delta, daxes)
+            else:
+                var_l1 = jax.lax.pmean(tree_sqdiff(delta_j, delta), daxes)
+                dsq = tree_sqnorm(delta)
             # synchronize: average replicas (params AND moments)
             p_avg = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), p_j)
             o_avg = {

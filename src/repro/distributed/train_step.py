@@ -27,9 +27,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 
 from repro.core.norm_test import (
-    worker_variance_stats, paper_faithful_worker_variance,
-    accum_variance_stats, tree_sqnorm)
-from repro.optim.adamw import AdamWConfig, init_adamw, adamw_update
+    worker_variance_stats, worker_variance_stats_flat,
+    paper_faithful_worker_variance, accum_variance_stats, tree_sqnorm)
+from repro.optim.adamw import (
+    AdamWConfig, init_adamw, init_adamw_flat, adamw_update, adamw_update_flat)
 from repro.distributed.params import param_pspecs, opt_pspecs
 from repro.distributed.sharding import (
     DEFAULT_RULES, MULTIPOD_RULES, manual_data_rules, use_sharding_rules,
@@ -55,6 +56,21 @@ def _rules_for(mesh):
 def _batch_pspec(batch_tree, daxes):
     """(M, B, ...) leaves: shard the global-batch dim over the data axes."""
     return jax.tree.map(lambda x: P(None, daxes) if x.ndim >= 2 else P(), batch_tree)
+
+
+def _check_stats_impl(stats_impl: str, variance_impl: str = "scalar"):
+    if stats_impl not in ("tree", "flat"):
+        raise ValueError(f"stats_impl must be 'tree' or 'flat', got {stats_impl!r}")
+    if stats_impl == "flat" and variance_impl == "paper":
+        raise ValueError("variance_impl='paper' (full-vector all-reduce "
+                         "baseline) has no flat-buffer path; use stats_impl='tree'")
+
+
+def _opt_like_for(stats_impl: str, params_like):
+    """Abstract optimizer state: pytree moments ('tree') or the DESIGN §9
+    flat bucketed buffers ('flat')."""
+    init = init_adamw_flat if stats_impl == "flat" else init_adamw
+    return jax.eval_shape(init, params_like)
 
 
 def _accumulate(model, params, batch, track_micro_sqnorm: bool):
@@ -99,10 +115,16 @@ def _accumulate(model, params, batch, track_micro_sqnorm: bool):
 
 def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
                         variance_impl: str = "scalar",
+                        stats_impl: str = "tree",
                         sequence_parallel: bool = False,
                         params_like=None, jit: bool = True):
     """variance_impl: 'scalar' (pre-reduced 8-byte collective, DESIGN §7.1)
-    or 'paper' (eq. 5 literal: all-reduce the full (g_j-g)² vector)."""
+    or 'paper' (eq. 5 literal: all-reduce the full (g_j-g)² vector).
+
+    stats_impl: 'tree' (leaf-by-leaf reference path) or 'flat' (DESIGN §9:
+    bucketed flat buffers, single-pass fused statistics, one AdamW launch
+    per bucket; optimizer state from `init_adamw_flat`)."""
+    _check_stats_impl(stats_impl, variance_impl)
     daxes = data_axes(mesh)
     manual = _manual_axes(mesh, daxes)
     base = _rules_for(mesh)
@@ -119,13 +141,22 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
             w_sum = jnp.maximum(jax.lax.psum(w_j, daxes), 1.0)
             g = jax.tree.map(
                 lambda x: jax.lax.psum(x * w_j, daxes) / w_sum, g_j)
-            if variance_impl == "paper":
+            if stats_impl == "flat":
+                # single-pass fused pair + per-bucket fused AdamW; the ‖g‖²
+                # from the statistics doubles as the clip norm (no re-read)
+                var_l1, gsq = worker_variance_stats_flat(g_j, g, daxes)
+            elif variance_impl == "paper":
                 var_l1, gsq = paper_faithful_worker_variance(g_j, g, daxes)
             else:
                 var_l1, gsq = worker_variance_stats(g_j, g, daxes)
             loss = jax.lax.psum(loss * w_j, daxes) / w_sum
             aux = jax.lax.psum(aux * w_j, daxes) / w_sum
-            new_params, new_opt, gnorm = adamw_update(params, g, opt_state, opt_cfg, lr)
+            if stats_impl == "flat":
+                new_params, new_opt, gnorm, _ = adamw_update_flat(
+                    params, g, opt_state, opt_cfg, lr, grad_sqnorm=gsq)
+            else:
+                new_params, new_opt, gnorm = adamw_update(
+                    params, g, opt_state, opt_cfg, lr)
         metrics = {"loss": loss, "aux": aux, "var_l1": var_l1,
                    "grad_sqnorm": gsq, "grad_norm": gnorm}
         return new_params, new_opt, metrics
@@ -133,8 +164,12 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
     if params_like is None:
         params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     p_specs = param_pspecs(params_like, mesh, fsdp=False)
-    opt_like = jax.eval_shape(init_adamw, params_like)
-    o_specs = {"m": p_specs, "v": p_specs, "count": P()}
+    opt_like = _opt_like_for(stats_impl, params_like)
+    if stats_impl == "flat":
+        # bucketed 1-D buffers: replicated (like the fully-manual params)
+        o_specs = jax.tree.map(lambda _: P(), opt_like)
+    else:
+        o_specs = {"m": p_specs, "v": p_specs, "count": P()}
 
     def batch_specs(batch_like):
         return _batch_pspec(batch_like, daxes)
@@ -177,9 +212,17 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
 # -------------------------------------------------------- ACCUM-NORM ----
 
 def make_accum_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
+                         stats_impl: str = "tree",
                          params_like=None, jit: bool = True):
     """Beyond-paper: pure-GSPMD step with full-mesh FSDP params; variance from
-    accumulation microbatches (requires M >= 2 for a signal)."""
+    accumulation microbatches (requires M >= 2 for a signal).
+
+    stats_impl='flat' (DESIGN §9): the AdamW tail runs over bucketed flat
+    buffers and its Σ‖g‖² kernel byproduct feeds the variance statistic and
+    the grad_norm metric — zero extra gradient-sized passes.  Flat moment
+    buffers are replicated (not FSDP-sharded); sharded flat buckets are a
+    ROADMAP item, so 'tree' remains the default for model>memory meshes."""
+    _check_stats_impl(stats_impl)
     daxes = data_axes(mesh)
     rules = _rules_for(mesh)
     J = num_workers(mesh)
@@ -191,8 +234,14 @@ def make_accum_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
                 lambda x: jax.lax.with_sharding_constraint(
                     x, P(None, daxes)) if x.ndim >= 2 else x, batch)
             g, loss, aux, sq_sum, m_eff, _ = _accumulate(model, params, batch, True)
-            var_l1, gsq = accum_variance_stats(sq_sum, g, m_eff, J)
-            new_params, new_opt, gnorm = adamw_update(params, g, opt_state, opt_cfg, lr)
+            if stats_impl == "flat":
+                new_params, new_opt, gnorm, gsq = adamw_update_flat(
+                    params, g, opt_state, opt_cfg, lr)
+                var_l1, gsq = accum_variance_stats(sq_sum, g, m_eff, J, gsq=gsq)
+            else:
+                var_l1, gsq = accum_variance_stats(sq_sum, g, m_eff, J)
+                new_params, new_opt, gnorm = adamw_update(
+                    params, g, opt_state, opt_cfg, lr)
         metrics = {"loss": loss, "aux": aux, "var_l1": var_l1,
                    "grad_sqnorm": gsq, "grad_norm": gnorm}
         return new_params, new_opt, metrics
@@ -200,7 +249,11 @@ def make_accum_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
     if params_like is None:
         params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     p_specs = param_pspecs(params_like, mesh, fsdp=True)
-    o_specs = {"m": p_specs, "v": p_specs, "count": P()}
+    if stats_impl == "flat":
+        opt_like = _opt_like_for(stats_impl, params_like)
+        o_specs = jax.tree.map(lambda _: P(), opt_like)
+    else:
+        o_specs = {"m": p_specs, "v": p_specs, "count": P()}
 
     def wrap(batch_like):
         if not jit:

@@ -1,3 +1,55 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Shared Pallas plumbing lives here so every kernel module resolves the
+# execution mode the same way instead of hard-coding `interpret=True`:
+#
+# * `resolve_interpret(flag)` — explicit flag wins; else the
+#   `REPRO_PALLAS_INTERPRET` env var (0/1); else auto-detect once per
+#   process (compiled on TPU, interpreted everywhere else).
+# * `pad_to_blocks(flat, block_rows)` — the common (rows, LANE) padding
+#   used by the 1-D-grid reduction/update kernels.
+
+from __future__ import annotations
+
+import functools
+import os
+
+LANE = 128
+
+
+@functools.lru_cache(maxsize=None)
+def _backend_is_tpu() -> bool:
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(flag: bool | None = None) -> bool:
+    """Pallas execution mode: explicit flag > env override > backend.
+
+    `REPRO_PALLAS_INTERPRET=1` forces interpret mode everywhere (debugging);
+    `=0` forces compiled Pallas even off-TPU (will fail on backends without
+    Mosaic — use only on TPU-like targets).  Unset: compiled on TPU,
+    interpreted elsewhere (this container is CPU-only; interpret mode is the
+    correctness path, validated against ref.py).
+    """
+    if flag is not None:
+        return bool(flag)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env:
+        return env not in ("0", "false", "no")
+    return not _backend_is_tpu()
+
+
+def pad_to_blocks(flat, block_rows: int):
+    """Zero-pad a 1-D array to whole (block_rows, LANE) tiles; returns the
+    (blocks*block_rows, LANE) view and the block count."""
+    import jax.numpy as jnp
+    n = flat.shape[0]
+    per_block = block_rows * LANE
+    blocks = max(1, -(-n // per_block))
+    padded = blocks * per_block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(blocks * block_rows, LANE), blocks

@@ -2,9 +2,19 @@
 
 One pass over (p, g, m, v) tiles in VMEM producing (p', m', v') — instead of
 the ~10 separate elementwise HLO ops (each an HBM round-trip) XLA emits for
-the unfused update.  Scalar step state (lr and the bias corrections c1, c2,
-which change every step) arrives as a (1, 8) f32 operand broadcast to every
-grid step; the static hyperparameters are closure constants.
+the unfused update.  Scalar step state (lr, the bias corrections c1/c2, and
+the global-norm clip scale, all of which change every step) arrives as a
+(1, 4) f32 operand broadcast to every grid step; the static hyperparameters
+are closure constants.
+
+Two entry points:
+
+* `fused_adamw`       — the original per-tensor update (p', m', v').
+* `fused_adamw_stats` — the flat-buffer path (DESIGN §9): same update over
+  one dtype-homogeneous buffer, consuming a traced `clip_scale` and emitting
+  **Σg² of the raw gradient as a kernel byproduct** (one f32 partial per
+  block), so the ACCUM-NORM statistic and the `grad_norm` metric cost zero
+  extra passes over gradient-sized data.
 """
 
 from __future__ import annotations
@@ -15,49 +25,65 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANE = 128
+from repro.kernels import LANE, pad_to_blocks, resolve_interpret
+
 DEFAULT_BLOCK_ROWS = 256
 
 
-def _kernel(scalars_ref, p_ref, g_ref, m_ref, v_ref,
-            p_out, m_out, v_out, *, beta1, beta2, eps, weight_decay):
+def _update(g, p_ref, m_ref, v_ref, scalars_ref, *, beta1, beta2, eps,
+            weight_decay):
     lr = scalars_ref[0, 0]
     c1 = scalars_ref[0, 1]
     c2 = scalars_ref[0, 2]
-    g = g_ref[...].astype(jnp.float32)
     m = beta1 * m_ref[...] + (1.0 - beta1) * g
     v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
     mhat = m / c1
     vhat = v / c2
     p = p_ref[...].astype(jnp.float32)
     p = (1.0 - lr * weight_decay) * p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p, m, v
+
+
+def _kernel(scalars_ref, p_ref, g_ref, m_ref, v_ref,
+            p_out, m_out, v_out, *, beta1, beta2, eps, weight_decay):
+    g = g_ref[...].astype(jnp.float32)
+    p, m, v = _update(g, p_ref, m_ref, v_ref, scalars_ref, beta1=beta1,
+                      beta2=beta2, eps=eps, weight_decay=weight_decay)
     p_out[...] = p.astype(p_out.dtype)
     m_out[...] = m
     v_out[...] = v
 
 
-def _pad_2d(flat, block_rows):
-    n = flat.shape[0]
-    per_block = block_rows * LANE
-    blocks = max(1, -(-n // per_block))
-    padded = blocks * per_block
-    if padded != n:
-        flat = jnp.pad(flat, (0, padded - n))
-    return flat.reshape(blocks * block_rows, LANE), blocks
+def _stats_kernel(scalars_ref, p_ref, g_ref, m_ref, v_ref,
+                  p_out, m_out, v_out, gsq_out, *, beta1, beta2, eps,
+                  weight_decay):
+    g_raw = g_ref[...].astype(jnp.float32)
+    gsq_out[0, 0] = jnp.sum(g_raw * g_raw)        # byproduct: pre-clip Σg²
+    g = g_raw * scalars_ref[0, 3]                  # global-norm clip scale
+    p, m, v = _update(g, p_ref, m_ref, v_ref, scalars_ref, beta1=beta1,
+                      beta2=beta2, eps=eps, weight_decay=weight_decay)
+    p_out[...] = p.astype(p_out.dtype)
+    m_out[...] = m
+    v_out[...] = v
+
+
+def _scalars(lr, c1, c2, clip_scale=1.0):
+    return jnp.stack([jnp.asarray(lr, jnp.float32),
+                      jnp.asarray(c1, jnp.float32),
+                      jnp.asarray(c2, jnp.float32),
+                      jnp.asarray(clip_scale, jnp.float32)]).reshape(1, 4)
 
 
 def fused_adamw(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, c1, c2,
-                block_rows: int = DEFAULT_BLOCK_ROWS, interpret: bool = True):
+                block_rows: int = DEFAULT_BLOCK_ROWS,
+                interpret: bool | None = None):
     """AdamW update on one tensor; returns (p', m', v') with p's shape/dtype."""
+    ip = resolve_interpret(interpret)
     shape, n = p.shape, p.size
-    pf, blocks = _pad_2d(p.reshape(-1), block_rows)
-    gf, _ = _pad_2d(g.reshape(-1), block_rows)
-    mf, _ = _pad_2d(m.reshape(-1).astype(jnp.float32), block_rows)
-    vf, _ = _pad_2d(v.reshape(-1).astype(jnp.float32), block_rows)
-    scalars = jnp.stack([jnp.asarray(lr, jnp.float32),
-                         jnp.asarray(c1, jnp.float32),
-                         jnp.asarray(c2, jnp.float32),
-                         jnp.zeros((), jnp.float32)]).reshape(1, 4)
+    pf, blocks = pad_to_blocks(p.reshape(-1), block_rows)
+    gf, _ = pad_to_blocks(g.reshape(-1), block_rows)
+    mf, _ = pad_to_blocks(m.reshape(-1).astype(jnp.float32), block_rows)
+    vf, _ = pad_to_blocks(v.reshape(-1).astype(jnp.float32), block_rows)
 
     kernel = functools.partial(_kernel, beta1=beta1, beta2=beta2, eps=eps,
                                weight_decay=weight_decay)
@@ -72,7 +98,44 @@ def fused_adamw(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, c1, c2,
             jax.ShapeDtypeStruct(mf.shape, jnp.float32),
             jax.ShapeDtypeStruct(vf.shape, jnp.float32),
         ],
-        interpret=interpret,
-    )(scalars, pf, gf, mf, vf)
+        interpret=ip,
+    )(_scalars(lr, c1, c2), pf, gf, mf, vf)
     unpad = lambda a: a.reshape(-1)[:n].reshape(shape)
     return unpad(p2), unpad(m2), unpad(v2)
+
+
+def fused_adamw_stats(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay,
+                      c1, c2, clip_scale=1.0,
+                      block_rows: int = DEFAULT_BLOCK_ROWS,
+                      interpret: bool | None = None):
+    """Flat-buffer AdamW: one launch over one dtype-homogeneous buffer.
+
+    `clip_scale` (traced f32) is folded into the gradient inside the kernel;
+    returns (p', m', v', Σg²) where Σg² is of the RAW (pre-clip) gradient —
+    zero padding contributes nothing to it."""
+    ip = resolve_interpret(interpret)
+    shape, n = p.shape, p.size
+    pf, blocks = pad_to_blocks(p.reshape(-1), block_rows)
+    gf, _ = pad_to_blocks(g.reshape(-1), block_rows)
+    mf, _ = pad_to_blocks(m.reshape(-1).astype(jnp.float32), block_rows)
+    vf, _ = pad_to_blocks(v.reshape(-1).astype(jnp.float32), block_rows)
+
+    kernel = functools.partial(_stats_kernel, beta1=beta1, beta2=beta2,
+                               eps=eps, weight_decay=weight_decay)
+    spec = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    part = pl.BlockSpec((1, 1), lambda i: (i, 0))
+    p2, m2, v2, gsq = pl.pallas_call(
+        kernel,
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((1, 4), lambda i: (0, 0)), spec, spec, spec, spec],
+        out_specs=[spec, spec, spec, part],
+        out_shape=[
+            jax.ShapeDtypeStruct(pf.shape, p.dtype),
+            jax.ShapeDtypeStruct(mf.shape, jnp.float32),
+            jax.ShapeDtypeStruct(vf.shape, jnp.float32),
+            jax.ShapeDtypeStruct((blocks, 1), jnp.float32),
+        ],
+        interpret=ip,
+    )(_scalars(lr, c1, c2, clip_scale), pf, gf, mf, vf)
+    unpad = lambda a: a.reshape(-1)[:n].reshape(shape)
+    return unpad(p2), unpad(m2), unpad(v2), jnp.sum(gsq)

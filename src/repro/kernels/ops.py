@@ -1,8 +1,13 @@
 """jit'd public wrappers for the Pallas kernels.
 
-`interpret` defaults to True off-TPU (this container is CPU-only; the kernels
-target TPU and are validated against ref.py in interpret mode) and False on a
-real TPU backend.
+`interpret` resolves through `repro.kernels.resolve_interpret`: explicit
+flag > `REPRO_PALLAS_INTERPRET` env override > backend auto-detect (compiled
+on TPU, interpreted elsewhere — this container is CPU-only; the kernels
+target TPU and are validated against ref.py in interpret mode).
+
+The `*_flat` entry points at the bottom are the DESIGN §9 hot-path dispatch:
+compiled Pallas on TPU, the fused-jnp reference otherwise (interpret-mode
+Pallas is a correctness tool, far too slow for the per-step tail).
 """
 
 from __future__ import annotations
@@ -12,15 +17,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import _backend_is_tpu, resolve_interpret as _default_resolve
 from repro.kernels import ref
 from repro.kernels.sqdiff_norm import sqdiff_norm as _sqdiff_norm
-from repro.kernels.fused_adamw import fused_adamw as _fused_adamw
+from repro.kernels.fused_adamw import (
+    fused_adamw as _fused_adamw, fused_adamw_stats as _fused_adamw_stats)
+from repro.kernels.fused_stats import fused_stats as _fused_stats
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 
 
 def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return _default_resolve(None)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -62,6 +70,49 @@ def fused_adamw_tree(params, grads, m, v, *, lr, beta1, beta2, eps,
         new_p.append(a); new_m.append(b); new_v.append(c)
     unf = treedef.unflatten
     return unf(new_p), unf(new_m), unf(new_v)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_stats(x, y, interpret: bool | None = None):
+    """(Σ(x−y)², Σy²) in one read of each operand (norm-test statistics)."""
+    ip = _default_interpret() if interpret is None else interpret
+    return _fused_stats(x, y, interpret=ip)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "beta1", "beta2", "eps", "weight_decay", "interpret"))
+def fused_adamw_stats(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay,
+                      c1, c2, clip_scale=1.0, interpret: bool | None = None):
+    ip = _default_interpret() if interpret is None else interpret
+    return _fused_adamw_stats(p, g, m, v, lr=lr, beta1=beta1, beta2=beta2,
+                              eps=eps, weight_decay=weight_decay, c1=c1,
+                              c2=c2, clip_scale=clip_scale, interpret=ip)
+
+
+# ------------------------------------------------ flat hot-path dispatch ----
+# Traced inside the train steps (no jit here — the callers are jitted).
+# Compiled Pallas on TPU; fused-jnp reference elsewhere.  NOT governed by
+# REPRO_PALLAS_INTERPRET: interpret-mode Pallas is for validating kernels,
+# not for running the per-step tail.
+
+def stats_flat(x, y):
+    """Backend-dispatched single-pass (Σ(x−y)², Σy²) over flat buffers."""
+    if _backend_is_tpu():
+        return _fused_stats(x, y, interpret=False)
+    return ref.fused_stats_ref(x, y)
+
+
+def adamw_flat(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, c1, c2,
+               clip_scale=1.0):
+    """Backend-dispatched flat-buffer AdamW; returns (p', m', v', Σg²_raw)."""
+    if _backend_is_tpu():
+        return _fused_adamw_stats(p, g, m, v, lr=lr, beta1=beta1, beta2=beta2,
+                                  eps=eps, weight_decay=weight_decay, c1=c1,
+                                  c2=c2, clip_scale=clip_scale,
+                                  interpret=False)
+    return ref.adamw_stats_ref(p, g, m, v, lr=lr, beta1=beta1, beta2=beta2,
+                               eps=eps, weight_decay=weight_decay, c1=c1,
+                               c2=c2, clip_scale=clip_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))

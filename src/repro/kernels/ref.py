@@ -16,6 +16,25 @@ def sqnorm_ref(x):
     return jnp.sum(jnp.square(x.astype(jnp.float32)))
 
 
+def fused_stats_ref(x, y):
+    """(Σ(x−y)², Σy²) in f32 — the single-pass norm-test statistics pair."""
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    d = x32 - y32
+    return jnp.sum(d * d), jnp.sum(y32 * y32)
+
+
+def adamw_stats_ref(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay,
+                    c1, c2, clip_scale=1.0):
+    """Flat AdamW with clip scale folded in + pre-clip Σg² byproduct."""
+    g32 = g.astype(jnp.float32)
+    gsq = jnp.sum(g32 * g32)
+    p2, m2, v2 = adamw_ref(p, g32 * clip_scale, m, v, lr=lr, beta1=beta1,
+                           beta2=beta2, eps=eps, weight_decay=weight_decay,
+                           c1=c1, c2=c2)
+    return p2, m2, v2, gsq
+
+
 def adamw_ref(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, c1, c2):
     """One AdamW update on a flat tensor (bias-corrected, decoupled decay)."""
     g32 = g.astype(jnp.float32)

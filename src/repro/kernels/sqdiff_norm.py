@@ -12,13 +12,12 @@ sums the partials (a trivially small reduction).
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANE = 128
+from repro.kernels import LANE, pad_to_blocks, resolve_interpret
+
 DEFAULT_BLOCK_ROWS = 256     # 256×128 f32 tile = 128 KiB/operand in VMEM
 
 
@@ -27,22 +26,13 @@ def _kernel(x_ref, y_ref, o_ref):
     o_ref[0, 0] = jnp.sum(d * d)
 
 
-def _pad_2d(flat, block_rows):
-    n = flat.shape[0]
-    per_block = block_rows * LANE
-    blocks = max(1, -(-n // per_block))
-    padded = blocks * per_block
-    if padded != n:
-        flat = jnp.pad(flat, (0, padded - n))
-    return flat.reshape(blocks * block_rows, LANE), blocks
-
-
 def sqdiff_norm(x, y, *, block_rows: int = DEFAULT_BLOCK_ROWS,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """Σ(x−y)² over arbitrarily-shaped equal-shape tensors, f32 result."""
     assert x.shape == y.shape, (x.shape, y.shape)
-    xf, blocks = _pad_2d(x.reshape(-1), block_rows)
-    yf, _ = _pad_2d(y.reshape(-1), block_rows)
+    ip = resolve_interpret(interpret)
+    xf, blocks = pad_to_blocks(x.reshape(-1), block_rows)
+    yf, _ = pad_to_blocks(y.reshape(-1), block_rows)
     partials = pl.pallas_call(
         _kernel,
         grid=(blocks,),
@@ -52,6 +42,6 @@ def sqdiff_norm(x, y, *, block_rows: int = DEFAULT_BLOCK_ROWS,
         ],
         out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((blocks, 1), jnp.float32),
-        interpret=interpret,
+        interpret=ip,
     )(xf, yf)
     return jnp.sum(partials)

@@ -41,7 +41,8 @@ from repro.distributed.train_step import make_fsdp_norm_step, make_accum_norm_st
 from repro.compat import set_mesh
 from repro.launch.mesh import make_host_mesh, num_workers
 from repro.models import build_model
-from repro.optim.adamw import AdamWConfig, init_adamw, warmup_cosine
+from repro.optim.adamw import (
+    AdamWConfig, init_adamw, init_adamw_flat, warmup_cosine)
 from repro.checkpoint.store import save_checkpoint
 
 
@@ -52,6 +53,7 @@ class TrainJob:
     schedule: str = "adaptive"            # adaptive | constant | stagewise
     step_impl: str = "fsdp_norm"          # fsdp_norm | accum_norm
     variance_impl: str = "scalar"         # scalar | paper
+    stats_impl: str = "tree"              # tree | flat (DESIGN §9 buffers)
     eta: float = 0.2
     steps: int = 200
     total_samples: int | None = None      # stop criterion (paper trains by samples)
@@ -103,7 +105,8 @@ def run_training(job: TrainJob) -> dict:
     model = build_model(cfg)
     key = jax.random.PRNGKey(job.seed)
     params = model.init(key)
-    opt_state = init_adamw(params)
+    opt_state = (init_adamw_flat(params) if job.stats_impl == "flat"
+                 else init_adamw(params))
 
     n_dev = len(jax.devices())
     d = job.mesh_data or max(1, n_dev // job.mesh_model)
@@ -115,9 +118,12 @@ def run_training(job: TrainJob) -> dict:
     if job.step_impl == "fsdp_norm":
         wrap, _, _ = make_fsdp_norm_step(model, opt_cfg, mesh,
                                          variance_impl=job.variance_impl,
+                                         stats_impl=job.stats_impl,
                                          params_like=params)
     else:
-        wrap, _, _ = make_accum_norm_step(model, opt_cfg, mesh, params_like=params)
+        wrap, _, _ = make_accum_norm_step(model, opt_cfg, mesh,
+                                          stats_impl=job.stats_impl,
+                                          params_like=params)
 
     if job.bucket_ladder == "off":
         ladder = None
@@ -283,7 +289,9 @@ def run_training(job: TrainJob) -> dict:
     if log_f:
         log_f.close()
     if engine is not None:
-        engine.drain()
+        # failures were already recovered by get_step's sync fallback; they
+        # surface as stats.warmup_failures rather than aborting the run
+        engine.drain(raise_errors=False)
         history["engine"] = engine.stats.as_dict()
     history["final_params"] = params
     return history

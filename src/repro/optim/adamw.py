@@ -6,6 +6,12 @@ axis).
 
 `use_kernel=True` routes the elementwise update through the Pallas
 `fused_adamw` TPU kernel (validated against this implementation in tests).
+
+The `*_flat` family (DESIGN §9) is the flat-buffer path: optimizer moments
+live as a few dtype-homogeneous bucketed buffers (`FlatLayout`) instead of
+pytrees, and the whole clip+update tail runs as one fused launch per bucket
+with the gradient's Σg² emitted as a kernel byproduct — O(buckets) ops per
+step instead of O(leaves), and no redundant norm passes.
 """
 
 from __future__ import annotations
@@ -78,6 +84,109 @@ def adamw_update(params, grads, state, cfg: AdamWConfig, lr):
     new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
     new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
     return new_params, {"m": new_m, "v": new_v, "count": count}, gnorm
+
+
+# -------------------------------------------------- flat-buffer path ----
+
+def init_adamw_flat(params):
+    """Moments as flat f32 buffers (tuples) matching `FlatLayout.from_tree(
+    params)` — the layout is rebuilt deterministically at every trace, so it
+    is never stored in the state."""
+    from repro.distributed.flatbuf import FlatLayout
+    layout = FlatLayout.from_tree(params)
+    return {
+        "m": tuple(layout.zeros(jnp.float32)),
+        "v": tuple(layout.zeros(jnp.float32)),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def flat_opt_state(params_like, state):
+    """Convert a tree optimizer state to the flat layout (tests/migration)."""
+    from repro.distributed.flatbuf import FlatLayout
+    layout = FlatLayout.from_tree(params_like)
+    return {"m": tuple(layout.flatten(state["m"])),
+            "v": tuple(layout.flatten(state["v"])),
+            "count": state["count"]}
+
+
+def unflat_opt_state(params_like, state):
+    """Inverse of `flat_opt_state` (bit-exact)."""
+    from repro.distributed.flatbuf import FlatLayout
+    layout = FlatLayout.from_tree(params_like)
+    return {"m": layout.unflatten(list(state["m"])),
+            "v": layout.unflatten(list(state["v"])),
+            "count": state["count"]}
+
+
+def adamw_update_buffers(pb, gb, mb, vb, cfg: AdamWConfig, lr, count, *,
+                         grad_sqnorm=None):
+    """The buffer-level AdamW tail: one fused launch per bucket.
+
+    All operands are lists of flat buffers (congruent bucketing).  If the
+    caller already holds Σ‖g‖² (e.g. from the fused norm-test statistics),
+    pass it as `grad_sqnorm` and the clip norm costs zero extra passes;
+    otherwise it comes from the update kernel's byproduct (no clipping) or
+    one read-only reduction (clipping enabled).
+
+    Returns (new_pb, new_mb, new_vb, new_count, grad_norm, grad_sqnorm).
+    """
+    from repro.kernels import ops
+
+    if not len(pb) == len(gb) == len(mb) == len(vb):
+        raise ValueError("flat state does not match the params layout "
+                         f"({len(pb)} vs {len(mb)} buffers)")
+    count = count + 1
+    c1 = 1.0 - cfg.beta1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.beta2 ** count.astype(jnp.float32)
+
+    if cfg.grad_clip > 0:
+        if grad_sqnorm is None:
+            grad_sqnorm = sum(
+                (jnp.sum(jnp.square(g.astype(jnp.float32))) for g in gb),
+                jnp.zeros((), jnp.float32))
+        scale = jnp.minimum(
+            1.0, cfg.grad_clip / (jnp.sqrt(grad_sqnorm) + 1e-12))
+    else:
+        scale = jnp.ones((), jnp.float32)
+
+    outs = [ops.adamw_flat(p, g, m, v, lr=lr, beta1=cfg.beta1,
+                           beta2=cfg.beta2, eps=cfg.eps,
+                           weight_decay=cfg.weight_decay, c1=c1, c2=c2,
+                           clip_scale=scale)
+            for p, g, m, v in zip(pb, gb, mb, vb)]
+    if grad_sqnorm is None:   # kernel byproduct: Σg² with zero extra passes
+        grad_sqnorm = sum((o[3] for o in outs), jnp.zeros((), jnp.float32))
+    gnorm = jnp.sqrt(grad_sqnorm)
+    return ([o[0] for o in outs], [o[1] for o in outs], [o[2] for o in outs],
+            count, gnorm, grad_sqnorm)
+
+
+def adamw_update_flat(params, grads, state, cfg: AdamWConfig, lr, *,
+                      grad_sqnorm=None):
+    """One AdamW step over flat buffers; state must come from
+    `init_adamw_flat` / `flat_opt_state`.
+
+    Params arrive (and return) as the model's pytree; params/gradients are
+    packed per-bucket on the way in and the updated params sliced back out
+    (`adamw_update_buffers` is the pack-free core for callers that already
+    hold buffers).
+
+    Returns (new_params, new_state, grad_norm, grad_sqnorm) — the extra
+    Σ‖g‖² return (vs `adamw_update`) lets the step reuse it for the
+    variance statistic and the `grad_norm` metric for free.
+    """
+    from repro.distributed.flatbuf import FlatLayout
+
+    layout = FlatLayout.from_tree(params)
+    pb = layout.flatten(params)
+    gb = layout.flatten(grads)
+    new_pb, new_mb, new_vb, count, gnorm, grad_sqnorm = adamw_update_buffers(
+        pb, gb, list(state["m"]), list(state["v"]), cfg, lr, state["count"],
+        grad_sqnorm=grad_sqnorm)
+    new_params = layout.unflatten(new_pb)
+    new_state = {"m": tuple(new_mb), "v": tuple(new_vb), "count": count}
+    return new_params, new_state, gnorm, grad_sqnorm
 
 
 # ------------------------------------------------------- lr schedules ----

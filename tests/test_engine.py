@@ -209,6 +209,54 @@ def test_engine_warmup_precompiles_next_bucket():
     assert len(builds) == 2 and engine.stats.hits == before + 1
 
 
+def test_engine_warmup_failure_counts_and_surfaces():
+    """Warmup stats are counted on COMPLETION: a background compile that
+    raises contributes to warmup_failures (never warmups/compiles),
+    `get_step` falls back to a synchronous build, and `drain()` re-raises
+    instead of swallowing the exception into a cache entry."""
+    ladder = parse_ladder("2:1,2:2,2:4", workers=1)
+
+    class ExplodingJitted:
+        def lower(self, *a):
+            raise RuntimeError("boom: AOT lowering failed")
+
+    builds = []
+
+    def wrap(batch_like):
+        builds.append(1)
+        return ExplodingJitted()
+
+    engine = BucketedEngine(wrap, ladder, params_like={}, opt_like={},
+                            aot_warmup=True)
+    src = MarkovTokens(vocab_size=32, seed=0)
+    plan = ladder[0]
+    batch = make_batch(src, 0, plan, seq_len=4)
+    engine.warmup(ladder[1], batch)
+    with pytest.raises(RuntimeError, match="warmup compile"):
+        engine.drain()
+    assert engine.stats.warmups == 0 and engine.stats.compiles == 0
+    assert engine.stats.warmup_failures == 1
+    assert engine.stats.as_dict()["warmup_failures"] == 1
+
+    # a failed warmup consumed by get_step: sync fallback, error kept for
+    # drain, training itself not interrupted
+    engine2 = BucketedEngine(wrap, ladder, params_like={}, opt_like={},
+                             aot_warmup=True)
+    engine2.warmup(ladder[1], batch)
+    plan2 = ladder[1]
+    batch2 = pad_to_bucket(make_batch(src, 1, plan2, seq_len=4), plan2, plan2)
+    # get_step blocks on the pending future, swallows its failure into
+    # warmup_failures, and falls back to a fresh sync build
+    step = engine2.get_step(batch2)
+    assert isinstance(step, ExplodingJitted)
+    assert engine2.stats.warmup_failures == 1
+    assert engine2.stats.compiles == 1          # the sync fallback build
+    with pytest.raises(RuntimeError, match="warmup compile"):
+        engine2.drain()
+    engine2.drain()                    # errors were flushed by the raise
+    assert engine2.stats.warmup_failures == 1
+
+
 def test_run_training_engine_stats_end_to_end():
     """The engine threads through launch/train.py: an adaptive run reports
     compiles == buckets used, and a new seq_len bucket is a new compile."""
