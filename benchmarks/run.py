@@ -286,34 +286,73 @@ def bench_flat_stats(steps):
 
 
 def _bench_step_per_bucket(nsteps):
-    """Per-step wall clock per engine bucket, tree vs flat stats path, from
-    short adaptive ACCUM-NORM runs — the engine/bucket half of
-    BENCH_step.json."""
+    """Per-step wall clock at EVERY ladder rung, tree vs flat stats path —
+    the engine/bucket half of BENCH_step.json.
+
+    Each rung gets its own constant-batch ACCUM-NORM run pinned to that
+    rung's capacity (the old adaptive run only ever produced steady-state
+    timings for the top rung it settled into), the first step per run is
+    excluded (compile), and the flat path's per-step gradient PACK time is
+    measured separately against the trained model's own parameter tree —
+    never hidden inside the step means."""
+    from repro.core.schedule import bucket_ladder
+    from repro.distributed.flatbuf import FlatLayout
     from repro.launch.train import TrainJob, run_training
 
-    out = {}
-    for stats_impl in ("tree", "flat"):
-        job = TrainJob(arch="llama3.2-1b", steps=nsteps, seq_len=32,
-                       base_global_batch=4, max_global_batch=16,
-                       base_micro_batch=2, max_micro_batch=2, base_accum=2,
-                       eta=0.12, step_impl="accum_norm",
-                       stats_impl=stats_impl, eval_every=0)
-        h = run_training(job)
-        times, batches = h["time"], h["global_batch"]
-        dts = [times[0]] + [b - a for a, b in zip(times, times[1:])]
-        buckets: dict = {}
-        seen = set()
-        for gb, dt in zip(batches, dts):
-            if gb not in seen:        # first step per bucket pays the compile
-                seen.add(gb)
-                continue
-            buckets.setdefault(str(gb), []).append(dt)
-        out[stats_impl] = {
-            k: {"steps": len(v), "mean_us": round(sum(v) / len(v) * 1e6, 1)}
-            for k, v in sorted(buckets.items(), key=lambda kv: int(kv[0]))}
-        for k, e in out[stats_impl].items():
+    base_gb, max_gb = 4, 16
+    ladder = bucket_ladder(workers=1, micro_batch=2, max_micro_batch=2,
+                           base_accum=2, base_global=base_gb,
+                           max_global=max_gb)
+    out = {"tree": {}, "flat": {}}
+    final_params = None
+    for rung in ladder:
+        # interleave the two impls per rung (this box is noisy — drift
+        # between a tree sweep and a flat sweep would swamp the tail delta)
+        for stats_impl in ("tree", "flat"):
+            job = TrainJob(arch="llama3.2-1b", schedule="constant",
+                           steps=nsteps + 1, seq_len=32,
+                           base_global_batch=rung.global_batch,
+                           max_global_batch=rung.global_batch,
+                           base_micro_batch=rung.micro_batch,
+                           max_micro_batch=rung.micro_batch,
+                           base_accum=rung.accum_steps,
+                           step_impl="accum_norm", stats_impl=stats_impl,
+                           eval_every=0)
+            h = run_training(job)
+            final_params = h["final_params"]
+            times = h["time"]
+            dts = [b - a for a, b in zip(times, times[1:])]  # drop compile
+            # scheduler stragglers (isolated ~3x spikes on this shared box)
+            # would swamp a sub-ms tail delta: report the mean over steps
+            # within 2x the median, and say how many were excluded
+            med = sorted(dts)[len(dts) // 2] if dts else 0.0
+            kept = [d for d in dts if d <= 2 * med] or dts
+            out[stats_impl][str(rung.global_batch)] = {
+                "steps": len(kept),
+                "outliers_dropped": len(dts) - len(kept),
+                "mean_us": round(sum(kept) / max(len(kept), 1) * 1e6, 1)}
+    for impl, rungs in out.items():
+        out[impl] = dict(sorted(rungs.items(), key=lambda kv: int(kv[0])))
+
+    # pack overhead, reported separately (same model, same layout the flat
+    # steps use): what one flatten of the gradient-shaped tree costs
+    layout = FlatLayout.from_tree(final_params)
+    pack = jax.jit(layout.flatten)
+    jax.block_until_ready(pack(final_params))
+    t0 = time.time()
+    reps = 5
+    for _ in range(reps):
+        packed = pack(final_params)
+    jax.block_until_ready(packed)
+    pack_us = round((time.time() - t0) / reps * 1e6, 1)
+    for e in out["flat"].values():
+        e["pack_us"] = pack_us
+
+    for stats_impl, rungs in out.items():
+        for k, e in rungs.items():
             _row(f"flat_stats/step_bucket{k}/{stats_impl}", e["mean_us"],
-                 steps=e["steps"])
+                 steps=e["steps"], **({"pack_us": pack_us}
+                                      if stats_impl == "flat" else {}))
     BENCH_JSON["step_per_bucket"] = out
 
 

@@ -91,15 +91,24 @@ def worker_variance_stats(local_grad, mean_grad, data_axes, *, sqdiff_fn=None):
     return var_l1, gsq
 
 
-def worker_variance_stats_flat(local_grad, mean_grad, data_axes):
+def worker_variance_stats_flat(local_grad, mean_grad, data_axes, *,
+                               layout=None):
     """Flat-buffer variant of `worker_variance_stats` (DESIGN §9): both trees
     are packed into a few dtype-homogeneous buckets and the fused-stats
     kernel computes ‖g_j − g‖² AND ‖g‖² in ONE read of each bucket —
     replacing the sqdiff + sqnorm double pass with a single-pass pair.
-    Same 8-byte pre-reduced collective as the tree path."""
+    Same 8-byte pre-reduced collective as the tree path.
+
+    `layout` is the step's shared `FlatLayout` (built once per step
+    signature by the step builder); when omitted it is rebuilt here, at
+    every trace.  Returns (var_l1, grad_sqnorm, mean_buffers) — the packed
+    mean-gradient buffers go straight into `adamw_update_buffers`, so the
+    mean gradient is packed exactly ONCE per step (the flat-tail
+    double-pack regression, DESIGN §9)."""
     from repro.distributed.flatbuf import FlatLayout
     from repro.kernels import ops
-    layout = FlatLayout.from_tree(mean_grad)
+    if layout is None:
+        layout = FlatLayout.from_tree(mean_grad)
     local_b = layout.flatten(local_grad)
     mean_b = layout.flatten(mean_grad)
     local_sq = jnp.zeros((), jnp.float32)
@@ -109,7 +118,7 @@ def worker_variance_stats_flat(local_grad, mean_grad, data_axes):
         local_sq += d
         gsq += q
     var_l1 = jax.lax.pmean(local_sq, data_axes)
-    return var_l1, gsq
+    return var_l1, gsq, mean_b
 
 
 def paper_faithful_worker_variance(local_grad, mean_grad, data_axes):

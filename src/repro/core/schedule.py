@@ -107,9 +107,16 @@ def quantize_to_ladder(desired_global: int, ladder: tuple[BatchPlan, ...],
     rungs beyond the controller's cap), so once the request exceeds the
     largest eligible rung, that rung is returned.  Never shrinks a request an
     eligible rung can cover.  Degenerate case — every rung above the cap —
-    falls back to the smallest rung."""
+    falls back to the smallest rung.
+
+    The scan early-outs on the first rung above the cap, which is only
+    correct on an ascending ladder — programmatically-built ladders are not
+    guaranteed sorted (`parse_ladder` validates, arbitrary tuples don't), so
+    capacities are sorted here before scanning rather than silently skipping
+    eligible rungs."""
     desired = desired_global if max_global is None else min(desired_global,
                                                             max_global)
+    ladder = tuple(sorted(ladder, key=lambda p: p.global_batch))
     best = None
     for plan in ladder:
         if max_global is not None and plan.global_batch > max_global:

@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import jax
@@ -111,10 +111,11 @@ class BucketedEngine:
         self._params_like = params_like
         self._opt_like = opt_like
         self._aot = aot_warmup and params_like is not None
-        self._cache: dict[tuple, object] = {}
+        self._cache: dict[tuple, object] = {}     # ALL access under _lock
         self._lock = threading.Lock()
         self._pool = ThreadPoolExecutor(max_workers=1) if self._aot else None
-        self._pending: dict[tuple, object] = {}   # key -> Future
+        self._pending: dict[tuple, object] = {}   # key -> warmup Future
+        self._building: dict[tuple, Future] = {}  # key -> foreground build
         self._warmup_errors: list[Exception] = []
         self.stats = EngineStats()
 
@@ -143,26 +144,63 @@ class BucketedEngine:
 
     def get_step(self, batch):
         """The compiled step for this (padded) batch's signature; traces at
-        most once per signature across the run.  A background warmup that
-        failed is recorded (surfaced later by `drain()`) and the step falls
-        back to a synchronous build."""
+        most once per signature across the run, even with concurrent
+        callers.  A background warmup that failed is recorded (surfaced
+        later by `drain()`) and the step falls back to a synchronous build.
+
+        Thread safety: every `_cache` read/write happens under `_lock`
+        (a finishing AOT warmup and a foreground build used to race the
+        unlocked check, double-compiling and double-counting
+        `stats.compiles`).  The blocking waits — a pending warmup's
+        `result()` and the actual trace — happen OUTSIDE the lock;
+        concurrent foreground callers rendezvous on a per-key `Future` in
+        `_building`, so exactly one traces and the rest wait for it."""
         key = _batch_key(batch)
         with self._lock:
             fut = self._pending.pop(key, None)
-        if fut is not None and key not in self._cache:
+        if fut is not None:
             try:
-                self._cache[key] = fut.result()  # warmup finished or finishes now
+                fn = fut.result()  # warmup finished or finishes now
             except Exception as e:               # noqa: BLE001 — surfaced in drain()
                 self._record_warmup_failure(e)
-        if key in self._cache:
-            with self._lock:   # background _compile_aot mutates stats too
-                self.stats.hits += 1
-            return self._cache[key]
-        fn = self._build(_sds(batch))
-        self._cache[key] = fn
-        with self._lock:
-            self.stats.compiles += 1
-        return fn
+            else:
+                with self._lock:
+                    self._cache.setdefault(key, fn)
+        while True:
+            with self._lock:
+                fn = self._cache.get(key)
+                if fn is not None:
+                    self.stats.hits += 1
+                    return fn
+                bfut = self._building.get(key)
+                if bfut is None:
+                    bfut = self._building[key] = Future()
+                    mine = True
+                else:
+                    mine = False
+            if mine:
+                try:
+                    fn = self._build(_sds(batch))
+                except BaseException as e:
+                    with self._lock:
+                        self._building.pop(key, None)
+                    bfut.set_exception(e)
+                    raise
+                with self._lock:
+                    self._cache[key] = fn
+                    self._building.pop(key, None)
+                    self.stats.compiles += 1
+                bfut.set_result(fn)
+                return fn
+            # another foreground caller owns the build: wait, then re-check
+            # the cache (on its failure, loop around and build ourselves).
+            # Only the BUILDER's propagated failure is absorbed — an
+            # interrupt raised in THIS thread while blocked must escape, or
+            # Ctrl-C during a compile wait would silently retry forever.
+            try:
+                bfut.result()
+            except Exception:                  # noqa: BLE001 — builder raised
+                pass
 
     def _record_warmup_failure(self, exc: Exception):
         with self._lock:
@@ -226,9 +264,12 @@ class BucketedEngine:
             pending = list(self._pending.items())
         for key, fut in pending:
             try:
-                self._cache[key] = fut.result()
+                fn = fut.result()
             except Exception as e:               # noqa: BLE001
                 self._record_warmup_failure(e)
+            else:
+                with self._lock:   # cache writes stay under the lock
+                    self._cache.setdefault(key, fn)
             with self._lock:
                 self._pending.pop(key, None)
         with self._lock:

@@ -16,7 +16,12 @@ kernels instead:
   concurrently and a TPU grid covers each with one launch;
 * every leaf records a static `(buffer_index, offset, size, shape)` slot, so
   `flatten`/`unflatten` are pure reshape+concat/slice — bit-exact round
-  trips, no dtype casts.
+  trips, no dtype casts;
+* with `shard_divisor=J` each bucket is zero-padded to a J-divisible size
+  (per-bucket `pad` recorded in `buffer_pads`), so the buffers carry real
+  data-axis `PartitionSpec`s over a J-worker mesh instead of being
+  replicated — the padded tail never overlaps a slot, contributes nothing
+  to any reduction, and round trips bit-exactly.
 
 The layout is a trace-time Python object (shapes/dtypes only): build it from
 concrete arrays or `ShapeDtypeStruct`s, reuse it across congruent trees
@@ -24,19 +29,39 @@ concrete arrays or `ShapeDtypeStruct`s, reuse it across congruent trees
 train steps are all-f32 regardless of param dtype — they flatten through the
 same slots into f32 buffers; `flatten` only requires each *bucket's* leaves
 to agree on the dtype of the tree actually being flattened.
+
+Packing is the flat path's per-step entry cost, so it is instrumented:
+`count_packs()` records every `flatten` call made while tracing, letting
+tests assert the mean gradient is packed exactly ONCE per step (the
+flat-tail double-pack regression guard).
 """
 
 from __future__ import annotations
 
+import contextlib
 import math
+import threading
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 
-# ~4 MiB of f32 per bucket: big enough that per-op dispatch overhead
-# vanishes, small enough for concurrent scheduling and VMEM-friendly grids.
+# ~4 MiB of f32 per bucket on TPU: big enough that per-launch overhead
+# vanishes, small enough for VMEM-friendly grids.
 DEFAULT_BUCKET_BYTES = 4 << 20
+# XLA CPU runs elementwise fusion loops single-threaded (only inter-op
+# concurrency uses the thread pool), so one big bucket SERIALIZES the tail
+# that the per-leaf tree path parallelizes across leaves for free — 128 KiB
+# buckets restore thread-level parallelism (measured 4× on the fused AdamW
+# at 0.5M params) while still collapsing op count well below leaf count.
+CPU_BUCKET_BYTES = 128 << 10
+
+
+def default_bucket_bytes() -> int:
+    """Backend-resolved bucket size: per-launch grids want few big buckets
+    (TPU), inter-op thread scheduling wants many small ones (CPU)."""
+    from repro.kernels import _backend_is_tpu
+    return DEFAULT_BUCKET_BYTES if _backend_is_tpu() else CPU_BUCKET_BYTES
 
 
 @dataclass(frozen=True)
@@ -49,50 +74,94 @@ class Slot:
     shape: tuple
 
 
+class _PackTrace(threading.local):
+    def __init__(self):
+        self.active: list | None = None
+
+
+_PACK_TRACE = _PackTrace()
+
+
+@contextlib.contextmanager
+def count_packs():
+    """Record every `FlatLayout.flatten` call (a trace-time event) made in
+    this thread while the context is open; yields the list of per-call leaf
+    counts.  Tracing one flat train step must show the mean gradient packed
+    exactly once — the op-count regression hook for the double-pack bug."""
+    prev, _PACK_TRACE.active = _PACK_TRACE.active, []
+    try:
+        yield _PACK_TRACE.active
+    finally:
+        _PACK_TRACE.active = prev
+
+
 class FlatLayout:
     """Static packing of a pytree into dtype-homogeneous bucketed buffers."""
 
-    def __init__(self, treedef, slots, buffer_sizes, buffer_dtypes):
+    def __init__(self, treedef, slots, buffer_sizes, buffer_dtypes,
+                 buffer_pads=None, shard_divisor: int = 1):
         self.treedef = treedef
         self.slots = tuple(slots)                  # ordered by leaf_index
-        self.buffer_sizes = tuple(buffer_sizes)
+        self.buffer_sizes = tuple(buffer_sizes)    # INCLUDING shard padding
         self.buffer_dtypes = tuple(buffer_dtypes)  # the layout tree's dtypes
+        self.buffer_pads = (tuple(buffer_pads) if buffer_pads is not None
+                            else (0,) * len(buffer_sizes))
+        self.shard_divisor = shard_divisor
         self.num_buffers = len(buffer_sizes)
         self.num_leaves = len(self.slots)
         self.total_size = sum(buffer_sizes)
 
     @classmethod
-    def from_tree(cls, tree, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    def from_tree(cls, tree, bucket_bytes: int | None = None,
+                  shard_divisor: int = 1):
         """Build from concrete arrays or ShapeDtypeStructs.  Leaves are
         packed first-seen-dtype-major, then greedily into buckets that close
-        once they reach `bucket_bytes` (a single oversized leaf is its own
-        bucket — leaves never straddle buckets)."""
+        once they reach `bucket_bytes` (backend-resolved default, see
+        `default_bucket_bytes`; a single oversized leaf is its own bucket —
+        leaves never straddle buckets).  Each closed bucket is padded up to
+        a `shard_divisor`-divisible size (zero-filled on `flatten`, never
+        referenced by any slot) so the buffers shard evenly over a
+        `shard_divisor`-worker data axis."""
+        if bucket_bytes is None:
+            bucket_bytes = default_bucket_bytes()
+        if shard_divisor < 1:
+            raise ValueError(f"shard_divisor must be >= 1, got {shard_divisor}")
         leaves, treedef = jax.tree.flatten(tree)
         by_dtype: dict = {}
         for i, leaf in enumerate(leaves):
             by_dtype.setdefault(jnp.dtype(leaf.dtype), []).append(i)
 
         slots = {}
-        sizes, dtypes = [], []
+        sizes, pads, dtypes = [], [], []
+
+        def close(data_size, dt):
+            pad = (-data_size) % shard_divisor
+            sizes.append(data_size + pad)
+            pads.append(pad)
+            dtypes.append(dt)
+
         for dt, idxs in by_dtype.items():
             target = max(1, bucket_bytes // max(dt.itemsize, 1))
             cur_off = 0
+            open_bucket = False
             for i in idxs:
                 size = math.prod(leaves[i].shape) if leaves[i].shape else 1
-                if cur_off and cur_off + size > target:
-                    sizes.append(cur_off)
-                    dtypes.append(dt)
+                if open_bucket and cur_off and cur_off + size > target:
+                    close(cur_off, dt)
                     cur_off = 0
-                if cur_off == 0:
+                    open_bucket = False
+                if not open_bucket:
                     buf_idx = len(sizes)
+                    open_bucket = True
                 slots[i] = Slot(i, buf_idx, cur_off, size,
                                 tuple(leaves[i].shape))
                 cur_off += size
-            if cur_off:
-                sizes.append(cur_off)
-                dtypes.append(dt)
+            if open_bucket:
+                # cur_off may be 0 here (a bucket of only size-0 leaves) —
+                # still a real bucket, or its slots would dangle
+                close(cur_off, dt)
         ordered = [slots[i] for i in range(len(leaves))]
-        return cls(treedef, ordered, sizes, dtypes)
+        return cls(treedef, ordered, sizes, dtypes, pads, shard_divisor)
 
     # ------------------------------------------------------------ pack ----
 
@@ -102,11 +171,14 @@ class FlatLayout:
         Buffer dtype is taken from the tree being flattened, not the layout
         tree — e.g. f32 gradients of bf16 params pack into f32 buffers
         through the bf16 layout's slots.  All leaves landing in one bucket
-        must agree on dtype."""
+        must agree on dtype.  Shard padding is zero-filled — bit-exact
+        round trips, zero contribution to any sum/moment."""
         leaves = jax.tree.leaves(tree)
         if len(leaves) != self.num_leaves:
             raise ValueError(
                 f"tree has {len(leaves)} leaves, layout expects {self.num_leaves}")
+        if _PACK_TRACE.active is not None:
+            _PACK_TRACE.active.append(self.num_leaves)
         parts: list = [[] for _ in range(self.num_buffers)]
         for slot, leaf in zip(self.slots, leaves):
             if tuple(leaf.shape) != slot.shape:
@@ -121,12 +193,15 @@ class FlatLayout:
             if len({r.dtype for r in ravels}) != 1:
                 raise ValueError(
                     f"buffer {bi} mixes dtypes {sorted({str(r.dtype) for r in ravels})}")
-            buffers.append(ravels[0] if len(ravels) == 1
-                           else jnp.concatenate(ravels))
+            buf = ravels[0] if len(ravels) == 1 else jnp.concatenate(ravels)
+            if self.buffer_pads[bi]:
+                buf = jnp.pad(buf, (0, self.buffer_pads[bi]))
+            buffers.append(buf)
         return buffers
 
     def unflatten(self, buffers):
-        """Inverse of `flatten`: slice each leaf back out (bit-exact)."""
+        """Inverse of `flatten`: slice each leaf back out (bit-exact; the
+        shard padding is never referenced by a slot)."""
         if len(buffers) != self.num_buffers:
             raise ValueError(
                 f"got {len(buffers)} buffers, layout expects {self.num_buffers}")
@@ -146,10 +221,13 @@ class FlatLayout:
         return [jnp.zeros((n,), dtype) for n in self.buffer_sizes]
 
 
-def flatten_tree(tree, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+def flatten_tree(tree, bucket_bytes: int | None = None,
+                 shard_divisor: int = 1):
     """One-shot convenience: (layout, buffers)."""
-    layout = FlatLayout.from_tree(tree, bucket_bytes)
+    layout = FlatLayout.from_tree(tree, bucket_bytes, shard_divisor)
     return layout, layout.flatten(tree)
 
 
-__all__ = ["FlatLayout", "Slot", "flatten_tree", "DEFAULT_BUCKET_BYTES"]
+__all__ = ["FlatLayout", "Slot", "flatten_tree", "count_packs",
+           "default_bucket_bytes", "DEFAULT_BUCKET_BYTES",
+           "CPU_BUCKET_BYTES"]

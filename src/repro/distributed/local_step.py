@@ -23,6 +23,7 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 
 from repro.core.norm_test import (
     tree_sqdiff, tree_sqnorm, worker_variance_stats_flat)
+from repro.distributed.flatbuf import FlatLayout
 from repro.optim.adamw import AdamWConfig, init_adamw, adamw_update
 from repro.distributed.params import param_pspecs
 from repro.distributed.sharding import manual_data_rules, use_sharding_rules
@@ -47,6 +48,13 @@ def make_local_sgd_step(model, opt_cfg: AdamWConfig, mesh, *,
     manual = _manual_axes(mesh, daxes)
     rules = manual_data_rules(_rules_for(mesh), manual)
 
+    if params_like is None:
+        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # one layout per step signature: the update-divergence trees (Δ_j, Δ)
+    # are param-shaped, so they pack through the params layout
+    layout = (FlatLayout.from_tree(params_like) if stats_impl == "flat"
+              else None)
+
     def inner(params, opt_state, batch, lr):
         with use_sharding_rules(rules, mesh):
             def local_step(carry, mb):
@@ -65,8 +73,10 @@ def make_local_sgd_step(model, opt_cfg: AdamWConfig, mesh, *,
             delta = jax.tree.map(lambda x: jax.lax.pmean(x, daxes), delta_j)
             if stats_impl == "flat":
                 # fused single-pass pair over bucketed flat buffers: pmean of
-                # the local scalar + ‖Δ‖², one read of Δ_j and Δ
-                var_l1, dsq = worker_variance_stats_flat(delta_j, delta, daxes)
+                # the local scalar + ‖Δ‖², one read of Δ_j and Δ (the shared
+                # layout means each tree is packed exactly once)
+                var_l1, dsq, _ = worker_variance_stats_flat(
+                    delta_j, delta, daxes, layout=layout)
             else:
                 var_l1 = jax.lax.pmean(tree_sqdiff(delta_j, delta), daxes)
                 dsq = tree_sqnorm(delta)
@@ -83,8 +93,6 @@ def make_local_sgd_step(model, opt_cfg: AdamWConfig, mesh, *,
                    "grad_norm": jnp.sqrt(dsq)}
         return p_avg, o_avg, metrics
 
-    if params_like is None:
-        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     p_specs = param_pspecs(params_like, mesh, fsdp=False)
     opt_like = jax.eval_shape(init_adamw, params_like)
     o_specs = {"m": p_specs, "v": p_specs, "count": P()}

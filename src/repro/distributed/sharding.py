@@ -94,6 +94,29 @@ def manual_data_rules(rules: ShardingRules, manual_axes: tuple[str, ...]) -> Sha
     return ShardingRules(rules=new)
 
 
+def flat_buffer_specs(num_buffers: int, axes: tuple[str, ...]) -> tuple[P, ...]:
+    """Per-bucket `PartitionSpec`s for the DESIGN §9 flat buffers: every 1-D
+    bucket shards its single dim over the data axes (the buckets are padded
+    to an axes-product-divisible size by `FlatLayout.from_tree(...,
+    shard_divisor=)`).  Empty `axes` (no data axis) degrades to replication."""
+    spec = P(axes) if axes else P()
+    return tuple(spec for _ in range(num_buffers))
+
+
+def shard_flat_buffers(buffers, axes: tuple[str, ...]):
+    """Constrain flat bucket buffers to their data-axis sharding (GSPMD
+    steps; advisory outside a mesh context, like `maybe_shard`)."""
+    if not axes:
+        return buffers
+    out = []
+    for b in buffers:
+        try:
+            out.append(jax.lax.with_sharding_constraint(b, P(axes)))
+        except ValueError:
+            out.append(b)      # no mesh context (unit tests)
+    return out
+
+
 class _Ctx(threading.local):
     def __init__(self):
         self.rules: ShardingRules | None = None
@@ -146,6 +169,8 @@ __all__ = [
     "MULTIPOD_RULES",
     "FULL_FSDP_RULES",
     "manual_data_rules",
+    "flat_buffer_specs",
+    "shard_flat_buffers",
     "use_sharding_rules",
     "current_rules",
     "logical_spec",

@@ -30,11 +30,13 @@ from repro.core.norm_test import (
     worker_variance_stats, worker_variance_stats_flat,
     paper_faithful_worker_variance, accum_variance_stats, tree_sqnorm)
 from repro.optim.adamw import (
-    AdamWConfig, init_adamw, init_adamw_flat, adamw_update, adamw_update_flat)
+    AdamWConfig, init_adamw, init_adamw_flat, adamw_update,
+    adamw_update_buffers)
+from repro.distributed.flatbuf import FlatLayout
 from repro.distributed.params import param_pspecs, opt_pspecs
 from repro.distributed.sharding import (
     DEFAULT_RULES, MULTIPOD_RULES, manual_data_rules, use_sharding_rules,
-    with_sequence_parallel)
+    with_sequence_parallel, flat_buffer_specs, shard_flat_buffers)
 from repro.compat import PARTIAL_AUTO_OK, shard_map
 from repro.launch.mesh import data_axes, num_workers
 
@@ -66,11 +68,58 @@ def _check_stats_impl(stats_impl: str, variance_impl: str = "scalar"):
                          "baseline) has no flat-buffer path; use stats_impl='tree'")
 
 
-def _opt_like_for(stats_impl: str, params_like):
+def _opt_like_for(stats_impl: str, params_like, shard_divisor: int = 1):
     """Abstract optimizer state: pytree moments ('tree') or the DESIGN §9
-    flat bucketed buffers ('flat')."""
-    init = init_adamw_flat if stats_impl == "flat" else init_adamw
-    return jax.eval_shape(init, params_like)
+    flat bucketed buffers ('flat', padded to `shard_divisor`-divisible
+    buckets so they shard evenly over the data axes)."""
+    if stats_impl == "flat":
+        return jax.eval_shape(
+            functools.partial(init_adamw_flat, shard_divisor=shard_divisor),
+            params_like)
+    return jax.eval_shape(init_adamw, params_like)
+
+
+def _worker_index(mesh, daxes):
+    """This manual instance's flattened data-worker index j ∈ [0, J), first
+    data axis major — the same order `P(daxes)` lays bucket shards out in."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in daxes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _flat_sharded_update(layout, params, gb, opt_state, opt_cfg, lr,
+                         grad_sqnorm, mesh, daxes):
+    """FSDP-style sharded flat AdamW inside the shard_map manual region
+    (DESIGN §9 sharded flat buckets).
+
+    The moment buffers arrive as this worker's 1/J bucket shard (in_specs
+    `P(daxes)`); the packed params / mean-gradient buffers are replicated
+    inside the manual region, so each worker slices out its own shard,
+    runs the fused update on 1/J of the data (per-worker moment memory AND
+    update flops drop by J), and only the updated *parameter* shards are
+    all-gathered back to the replicated layout.  Bucket sizes are
+    J-divisible by construction (`FlatLayout.from_tree(shard_divisor=J)`),
+    so the slices are exact.  `grad_sqnorm` is the globally-reduced Σ‖g‖²
+    from the fused statistics — the clip scale needs the GLOBAL norm, which
+    a per-shard kernel byproduct could not provide."""
+    J = num_workers(mesh)
+    pb = layout.flatten(params)
+    idx = _worker_index(mesh, daxes)
+
+    def shard(b):
+        n = b.shape[0] // J
+        return jax.lax.dynamic_slice_in_dim(b, idx * n, n)
+
+    pb_local = [shard(b) for b in pb]
+    gb_local = [shard(b) for b in gb]
+    new_pl, new_mb, new_vb, count, gnorm, _ = adamw_update_buffers(
+        pb_local, gb_local, list(opt_state["m"]), list(opt_state["v"]),
+        opt_cfg, lr, opt_state["count"], grad_sqnorm=grad_sqnorm)
+    new_pb = [jax.lax.all_gather(p, daxes, tiled=True) for p in new_pl]
+    new_params = layout.unflatten(new_pb)
+    new_opt = {"m": tuple(new_mb), "v": tuple(new_vb), "count": count}
+    return new_params, new_opt, gnorm
 
 
 def _accumulate(model, params, batch, track_micro_sqnorm: bool):
@@ -123,14 +172,24 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
 
     stats_impl: 'tree' (leaf-by-leaf reference path) or 'flat' (DESIGN §9:
     bucketed flat buffers, single-pass fused statistics, one AdamW launch
-    per bucket; optimizer state from `init_adamw_flat`)."""
+    per bucket; optimizer state from `init_adamw_flat(shard_divisor=J)` —
+    the moment buffers are SHARDED over the data axes, and the mean
+    gradient is packed exactly once per step)."""
     _check_stats_impl(stats_impl, variance_impl)
     daxes = data_axes(mesh)
+    J = num_workers(mesh)
     manual = _manual_axes(mesh, daxes)
     base = _rules_for(mesh)
     if sequence_parallel:
         base = with_sequence_parallel(base)
     rules = manual_data_rules(base, manual)
+
+    if params_like is None:
+        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # ONE layout per step signature, shared by the statistics and the AdamW
+    # tail (packs happen against it exactly once per tree per step)
+    layout = (FlatLayout.from_tree(params_like, shard_divisor=J)
+              if stats_impl == "flat" else None)
 
     def inner(params, opt_state, batch, lr):
         with use_sharding_rules(rules, mesh):
@@ -142,9 +201,10 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
             g = jax.tree.map(
                 lambda x: jax.lax.psum(x * w_j, daxes) / w_sum, g_j)
             if stats_impl == "flat":
-                # single-pass fused pair + per-bucket fused AdamW; the ‖g‖²
-                # from the statistics doubles as the clip norm (no re-read)
-                var_l1, gsq = worker_variance_stats_flat(g_j, g, daxes)
+                # single-pass fused pair; the packed mean-gradient buffers
+                # come back and feed the update directly — g is packed ONCE
+                var_l1, gsq, gb = worker_variance_stats_flat(
+                    g_j, g, daxes, layout=layout)
             elif variance_impl == "paper":
                 var_l1, gsq = paper_faithful_worker_variance(g_j, g, daxes)
             else:
@@ -152,8 +212,11 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
             loss = jax.lax.psum(loss * w_j, daxes) / w_sum
             aux = jax.lax.psum(aux * w_j, daxes) / w_sum
             if stats_impl == "flat":
-                new_params, new_opt, gnorm, _ = adamw_update_flat(
-                    params, g, opt_state, opt_cfg, lr, grad_sqnorm=gsq)
+                # per-bucket fused AdamW on this worker's 1/J bucket shard;
+                # the ‖g‖² from the statistics doubles as the clip norm
+                new_params, new_opt, gnorm = _flat_sharded_update(
+                    layout, params, gb, opt_state, opt_cfg, lr, gsq,
+                    mesh, daxes)
             else:
                 new_params, new_opt, gnorm = adamw_update(
                     params, g, opt_state, opt_cfg, lr)
@@ -161,27 +224,32 @@ def make_fsdp_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
                    "grad_sqnorm": gsq, "grad_norm": gnorm}
         return new_params, new_opt, metrics
 
-    if params_like is None:
-        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     p_specs = param_pspecs(params_like, mesh, fsdp=False)
-    opt_like = _opt_like_for(stats_impl, params_like)
+    opt_like = _opt_like_for(stats_impl, params_like, shard_divisor=J)
     if stats_impl == "flat":
-        # bucketed 1-D buffers: replicated (like the fully-manual params)
-        o_specs = jax.tree.map(lambda _: P(), opt_like)
+        # bucketed 1-D buffers: moments sharded over the data axes (the
+        # per-worker ~J× optimizer-memory saving), step count replicated
+        bspecs = flat_buffer_specs(layout.num_buffers, daxes)
+        o_specs = {"m": bspecs, "v": bspecs, "count": P()}
     else:
         o_specs = {"m": p_specs, "v": p_specs, "count": P()}
 
     def batch_specs(batch_like):
         return _batch_pspec(batch_like, daxes)
 
+    # inside the manual region, sharded flat moments enter/leave as the
+    # worker's local shard; everything else stays replicated
+    o_sm_specs = (o_specs if stats_impl == "flat"
+                  else jax.tree.map(lambda _: P(), opt_like))
+
     def wrap(batch_like):
         sm = shard_map(
             inner, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), params_like),
-                      jax.tree.map(lambda _: P(), opt_like),
+                      o_sm_specs,
                       batch_specs(batch_like), P()),
             out_specs=(jax.tree.map(lambda _: P(), params_like),
-                       jax.tree.map(lambda _: P(), opt_like),
+                       o_sm_specs,
                        {"loss": P(), "aux": P(), "var_l1": P(),
                         "grad_sqnorm": P(), "grad_norm": P()}),
             axis_names=set(manual), check_vma=False)
@@ -219,13 +287,19 @@ def make_accum_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
 
     stats_impl='flat' (DESIGN §9): the AdamW tail runs over bucketed flat
     buffers and its Σ‖g‖² kernel byproduct feeds the variance statistic and
-    the grad_norm metric — zero extra gradient-sized passes.  Flat moment
-    buffers are replicated (not FSDP-sharded); sharded flat buckets are a
-    ROADMAP item, so 'tree' remains the default for model>memory meshes."""
+    the grad_norm metric — zero extra gradient-sized passes, and the mean
+    gradient is packed exactly once per step.  Flat moment buffers carry
+    data-axis `PartitionSpec`s (J-divisible buckets), so the flat path
+    composes with full-mesh FSDP instead of replicating optimizer state."""
     _check_stats_impl(stats_impl)
     daxes = data_axes(mesh)
     rules = _rules_for(mesh)
     J = num_workers(mesh)
+
+    if params_like is None:
+        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    layout = (FlatLayout.from_tree(params_like, shard_divisor=J)
+              if stats_impl == "flat" else None)
 
     def step(params, opt_state, batch, lr):
         with use_sharding_rules(rules, mesh):
@@ -235,9 +309,19 @@ def make_accum_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
                     x, P(None, daxes)) if x.ndim >= 2 else x, batch)
             g, loss, aux, sq_sum, m_eff, _ = _accumulate(model, params, batch, True)
             if stats_impl == "flat":
-                new_params, new_opt, gnorm, gsq = adamw_update_flat(
-                    params, g, opt_state, opt_cfg, lr)
-                var_l1, gsq = accum_variance_stats(sq_sum, g, m_eff, J, gsq=gsq)
+                # pack g and params ONCE against the shared layout, keep the
+                # buffers on the data axes, and run the pack-free tail
+                gb = shard_flat_buffers(layout.flatten(g), daxes)
+                pb = shard_flat_buffers(layout.flatten(params), daxes)
+                new_pb, new_mb, new_vb, count, gnorm, gsq = \
+                    adamw_update_buffers(
+                        pb, gb, list(opt_state["m"]), list(opt_state["v"]),
+                        opt_cfg, lr, opt_state["count"])
+                new_params = layout.unflatten(new_pb)
+                new_opt = {"m": tuple(new_mb), "v": tuple(new_vb),
+                           "count": count}
+                var_l1, gsq = accum_variance_stats(sq_sum, g, m_eff, J,
+                                                   gsq=gsq)
             else:
                 var_l1, gsq = accum_variance_stats(sq_sum, g, m_eff, J)
                 new_params, new_opt, gnorm = adamw_update(
@@ -246,12 +330,10 @@ def make_accum_norm_step(model, opt_cfg: AdamWConfig, mesh, *,
                    "grad_sqnorm": gsq, "grad_norm": gnorm}
         return new_params, new_opt, metrics
 
-    if params_like is None:
-        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     p_specs = param_pspecs(params_like, mesh, fsdp=True)
     if stats_impl == "flat":
-        opt_like = _opt_like_for(stats_impl, params_like)
-        o_specs = jax.tree.map(lambda _: P(), opt_like)
+        bspecs = flat_buffer_specs(layout.num_buffers, daxes)
+        o_specs = {"m": bspecs, "v": bspecs, "count": P()}
     else:
         o_specs = {"m": p_specs, "v": p_specs, "count": P()}
 

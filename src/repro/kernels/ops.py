@@ -96,7 +96,12 @@ def fused_adamw_stats(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay,
 # not for running the per-step tail.
 
 def stats_flat(x, y):
-    """Backend-dispatched single-pass (Σ(x−y)², Σy²) over flat buffers."""
+    """Backend-dispatched single-pass (Σ(x−y)², Σy²) over flat buffers.
+
+    The Pallas grid is sized from the operand actually passed in — inside a
+    shard_map manual region that is the worker's LOCAL bucket shard, so a
+    J-way-sharded bucket costs 1/J of the launch grid per worker (zero
+    shard-padding contributes nothing to either sum)."""
     if _backend_is_tpu():
         return _fused_stats(x, y, interpret=False)
     return ref.fused_stats_ref(x, y)
@@ -104,7 +109,11 @@ def stats_flat(x, y):
 
 def adamw_flat(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, c1, c2,
                clip_scale=1.0):
-    """Backend-dispatched flat-buffer AdamW; returns (p', m', v', Σg²_raw)."""
+    """Backend-dispatched flat-buffer AdamW; returns (p', m', v', Σg²_raw).
+
+    Like `stats_flat`, the grid covers whatever buffer arrives: under the
+    sharded-bucket FSDP-Norm step each worker updates only its 1/J bucket
+    shard, so per-worker update flops and moment traffic drop by J."""
     if _backend_is_tpu():
         return _fused_adamw_stats(p, g, m, v, lr=lr, beta1=beta1, beta2=beta2,
                                   eps=eps, weight_decay=weight_decay, c1=c1,

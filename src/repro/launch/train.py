@@ -105,13 +105,15 @@ def run_training(job: TrainJob) -> dict:
     model = build_model(cfg)
     key = jax.random.PRNGKey(job.seed)
     params = model.init(key)
-    opt_state = (init_adamw_flat(params) if job.stats_impl == "flat"
-                 else init_adamw(params))
 
     n_dev = len(jax.devices())
     d = job.mesh_data or max(1, n_dev // job.mesh_model)
     mesh = make_host_mesh(data=d, model=job.mesh_model)
     workers = num_workers(mesh)
+    # flat moment buckets are padded to J-divisible sizes and SHARDED over
+    # the data axes (DESIGN §9) — the state layout must match the step's
+    opt_state = (init_adamw_flat(params, shard_divisor=workers)
+                 if job.stats_impl == "flat" else init_adamw(params))
 
     opt_cfg = AdamWConfig(lr=job.peak_lr, weight_decay=job.weight_decay,
                           grad_clip=job.grad_clip)
@@ -283,9 +285,18 @@ def run_training(job: TrainJob) -> dict:
                 log_f.flush()
 
     if job.checkpoint_dir:
+        meta = {"job": dataclasses.asdict(job)}
+        if job.stats_impl == "flat":
+            # flat moments are raw bucketed buffers: their layout depends on
+            # the backend-resolved bucket size and the mesh's worker count,
+            # so record both — a reader on a different backend/mesh must
+            # rebuild the SAME FlatLayout to unflatten them
+            from repro.distributed.flatbuf import default_bucket_bytes
+            meta["flat_layout"] = {"bucket_bytes": default_bucket_bytes(),
+                                   "shard_divisor": workers}
         save_checkpoint(job.checkpoint_dir, step,
                         {"params": params, "opt": opt_state},
-                        metadata={"job": dataclasses.asdict(job)})
+                        metadata=meta)
     if log_f:
         log_f.close()
     if engine is not None:

@@ -88,12 +88,15 @@ def adamw_update(params, grads, state, cfg: AdamWConfig, lr):
 
 # -------------------------------------------------- flat-buffer path ----
 
-def init_adamw_flat(params):
+def init_adamw_flat(params, *, shard_divisor: int = 1):
     """Moments as flat f32 buffers (tuples) matching `FlatLayout.from_tree(
-    params)` — the layout is rebuilt deterministically at every trace, so it
-    is never stored in the state."""
+    params, shard_divisor=...)` — the layout is rebuilt deterministically, so
+    it is never stored in the state.  `shard_divisor` must match the step's
+    layout (the data-axis worker count J when the buckets are mesh-sharded,
+    DESIGN §9): bucket sizes are padded to J-divisible so each worker holds
+    an exact 1/J moment shard."""
     from repro.distributed.flatbuf import FlatLayout
-    layout = FlatLayout.from_tree(params)
+    layout = FlatLayout.from_tree(params, shard_divisor=shard_divisor)
     return {
         "m": tuple(layout.zeros(jnp.float32)),
         "v": tuple(layout.zeros(jnp.float32)),
@@ -101,19 +104,19 @@ def init_adamw_flat(params):
     }
 
 
-def flat_opt_state(params_like, state):
+def flat_opt_state(params_like, state, *, shard_divisor: int = 1):
     """Convert a tree optimizer state to the flat layout (tests/migration)."""
     from repro.distributed.flatbuf import FlatLayout
-    layout = FlatLayout.from_tree(params_like)
+    layout = FlatLayout.from_tree(params_like, shard_divisor=shard_divisor)
     return {"m": tuple(layout.flatten(state["m"])),
             "v": tuple(layout.flatten(state["v"])),
             "count": state["count"]}
 
 
-def unflat_opt_state(params_like, state):
+def unflat_opt_state(params_like, state, *, shard_divisor: int = 1):
     """Inverse of `flat_opt_state` (bit-exact)."""
     from repro.distributed.flatbuf import FlatLayout
-    layout = FlatLayout.from_tree(params_like)
+    layout = FlatLayout.from_tree(params_like, shard_divisor=shard_divisor)
     return {"m": layout.unflatten(list(state["m"])),
             "v": layout.unflatten(list(state["v"])),
             "count": state["count"]}
@@ -163,14 +166,18 @@ def adamw_update_buffers(pb, gb, mb, vb, cfg: AdamWConfig, lr, count, *,
 
 
 def adamw_update_flat(params, grads, state, cfg: AdamWConfig, lr, *,
-                      grad_sqnorm=None):
+                      grad_sqnorm=None, layout=None):
     """One AdamW step over flat buffers; state must come from
-    `init_adamw_flat` / `flat_opt_state`.
+    `init_adamw_flat` / `flat_opt_state` (same layout/shard_divisor).
 
     Params arrive (and return) as the model's pytree; params/gradients are
     packed per-bucket on the way in and the updated params sliced back out
     (`adamw_update_buffers` is the pack-free core for callers that already
-    hold buffers).
+    hold buffers — the train steps use it directly so the mean gradient is
+    packed exactly once per step).
+
+    `layout` is the shared step-signature `FlatLayout`; omitted, it is
+    rebuilt here at every trace.
 
     Returns (new_params, new_state, grad_norm, grad_sqnorm) — the extra
     Σ‖g‖² return (vs `adamw_update`) lets the step reuse it for the
@@ -178,7 +185,8 @@ def adamw_update_flat(params, grads, state, cfg: AdamWConfig, lr, *,
     """
     from repro.distributed.flatbuf import FlatLayout
 
-    layout = FlatLayout.from_tree(params)
+    if layout is None:
+        layout = FlatLayout.from_tree(params)
     pb = layout.flatten(params)
     gb = layout.flatten(grads)
     new_pb, new_mb, new_vb, count, gnorm, grad_sqnorm = adamw_update_buffers(

@@ -320,6 +320,51 @@ print("FSDP_PAD_OK")
     assert "FSDP_PAD_OK" in out
 
 
+def test_get_step_concurrent_callers_compile_once():
+    """Regression for the unlocked-cache race: `get_step` used to read and
+    write `self._cache` outside `self._lock`, so a foreground build racing
+    another caller (e.g. a finishing AOT warmup) could trace the same
+    signature twice and double-count `stats.compiles`.  N threads asking
+    for the same batch must produce exactly ONE compile; everyone else is
+    a hit."""
+    import threading
+    import time as _time
+
+    ladder = parse_ladder("2:1,2:2", workers=1)
+    builds = []
+    entered = threading.Barrier(4 + 1, timeout=10)
+
+    def slow_wrap(batch_like):
+        builds.append(tuple(v.shape for v in batch_like.values()))
+        _time.sleep(0.05)          # widen the race window
+        return lambda *a: ("step", len(builds))
+
+    engine = BucketedEngine(slow_wrap, ladder)
+    src = MarkovTokens(vocab_size=32, seed=0)
+    batch = make_batch(src, 0, ladder[0], seq_len=4)
+
+    results, errors = [], []
+
+    def worker():
+        try:
+            entered.wait()
+            results.append(engine.get_step(batch))
+        except Exception as e:     # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    entered.wait()                 # release all workers at once
+    for t in threads:
+        t.join(timeout=10)
+    assert not errors
+    assert len(builds) == 1, f"double-compiled: {len(builds)} traces"
+    assert engine.stats.compiles == 1
+    assert engine.stats.hits == 3
+    assert len({id(fn) for fn in results}) == 1   # everyone got THE step
+
+
 def test_stagewise_stage_above_max_global_trains():
     """Regression: a stagewise stage configured above max_global_batch must
     ride the auto ladder's extended top rung, not crash in pad_to_bucket."""

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.norm_test import tree_sqdiff, tree_sqnorm
-from repro.distributed.flatbuf import FlatLayout, flatten_tree
+from repro.distributed.flatbuf import FlatLayout, count_packs, flatten_tree
 from repro.kernels import ops, ref, resolve_interpret
 from repro.optim.adamw import (
     AdamWConfig, init_adamw, init_adamw_flat, adamw_update, adamw_update_flat,
@@ -74,6 +74,96 @@ def test_flatten_congruent_tree_through_param_layout():
     assert all(b.dtype == jnp.float32 for b in bufs)
     back = layout.unflatten(bufs)
     assert jax.tree.leaves(back)[0].dtype == jnp.float32
+
+
+def test_empty_tree_layout():
+    """Zero-leaf trees: a valid (degenerate) layout with no buffers."""
+    layout, bufs = flatten_tree({})
+    assert layout.num_buffers == 0 and layout.num_leaves == 0
+    assert bufs == [] and layout.zeros() == []
+    assert layout.unflatten([]) == {}
+
+
+def test_size0_leaves_roundtrip():
+    """Size-0 leaves round trip; a dtype group holding ONLY size-0 leaves
+    still owns a real (0-sized) bucket instead of a dangling slot."""
+    tree = {"data": jnp.arange(5, dtype=jnp.float32),
+            "empty": jnp.zeros((0,), jnp.float32),
+            "empty2d": jnp.zeros((0, 3), jnp.float32),
+            "ints": jnp.zeros((0,), jnp.int32)}      # all-empty int32 group
+    layout, bufs = flatten_tree(tree)
+    assert layout.num_buffers == 2                   # f32 bucket + 0-size i32
+    assert 0 in layout.buffer_sizes
+    assert all(s.buffer_index < layout.num_buffers for s in layout.slots)
+    back = layout.unflatten(bufs)
+    for want, got in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert want.dtype == got.dtype and want.shape == got.shape
+        assert bool(jnp.all(want == got))
+
+
+def test_single_oversized_leaf_is_own_bucket():
+    """One leaf above bucket_bytes in a single-leaf tree: exactly one bucket
+    of exactly the leaf's size (plus shard padding when requested)."""
+    tree = {"big": jnp.zeros((5001,), jnp.float32)}
+    layout = FlatLayout.from_tree(tree, bucket_bytes=4000)   # 1000-elem target
+    assert layout.num_buffers == 1
+    assert layout.buffer_sizes == (5001,) and layout.buffer_pads == (0,)
+    lay8 = FlatLayout.from_tree(tree, bucket_bytes=4000, shard_divisor=8)
+    assert lay8.buffer_sizes == (5008,) and lay8.buffer_pads == (7,)
+
+
+def test_shard_divisor_padding_roundtrip():
+    """Mesh-divisible bucket padding: every bucket size divides J, the pad
+    is zero-filled on flatten, never referenced by a slot, and the
+    flatten→unflatten round trip stays bit-exact."""
+    tree = {"a": jnp.arange(17, dtype=jnp.float32),
+            "b": jnp.linspace(-1, 1, 23).astype(jnp.float32),
+            "c": jnp.arange(6, dtype=jnp.int32).reshape(2, 3),
+            "d": jnp.ones((3, 5), jnp.bfloat16)}
+    layout, bufs = flatten_tree(tree, bucket_bytes=64, shard_divisor=4)
+    assert all(n % 4 == 0 for n in layout.buffer_sizes)
+    assert sum(layout.buffer_pads) > 0               # padding actually occurred
+    for buf, pad, size in zip(bufs, layout.buffer_pads, layout.buffer_sizes):
+        assert buf.size == size
+        if pad:
+            assert bool(jnp.all(buf[size - pad:] == 0))   # zero-filled tail
+    for s in layout.slots:                           # slots never touch the pad
+        bi = s.buffer_index
+        assert s.offset + s.size <= layout.buffer_sizes[bi] - layout.buffer_pads[bi]
+    back = layout.unflatten(bufs)
+    for want, got in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert want.dtype == got.dtype and want.shape == got.shape
+        assert bool(jnp.all(want == got))            # bit-exact through the pad
+    # moment state built at the same divisor matches the padded bucketing
+    flat = init_adamw_flat(tree, shard_divisor=4)
+    default_layout = FlatLayout.from_tree(tree, shard_divisor=4)
+    assert tuple(b.size for b in flat["m"]) == default_layout.buffer_sizes
+    assert all(n % 4 == 0 for n in default_layout.buffer_sizes)
+
+
+def test_adamw_flat_padded_matches_tree():
+    """Shard padding is inert end-to-end: the padded flat AdamW equals the
+    tree update, and the pad region of the moments stays zero."""
+    params = {"w": jax.random.normal(KEY, (37,)),
+              "b": jax.random.normal(jax.random.PRNGKey(3), (10,))}
+    grads = jax.tree.map(lambda x: x * 0.05 + 0.01, params)
+    cfg = AdamWConfig()
+    layout = FlatLayout.from_tree(params, shard_divisor=16)
+    assert sum(layout.buffer_pads) > 0
+    st = init_adamw(params)
+    p1, s1, gn1 = adamw_update(params, grads, st, cfg, 1e-3)
+    p2, s2, gn2, _ = adamw_update_flat(
+        params, grads, flat_opt_state(params, st, shard_divisor=16), cfg,
+        1e-3, layout=layout)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(float(gn1), float(gn2), rtol=1e-6)
+    for mv in ("m", "v"):
+        for buf, pad, size in zip(s2[mv], layout.buffer_pads,
+                                  layout.buffer_sizes):
+            if pad:
+                assert bool(jnp.all(buf[size - pad:] == 0))
 
 
 def test_layout_validation_errors():
@@ -261,6 +351,79 @@ def test_flat_tail_op_count_scales_with_buckets_not_leaves():
     n_flat = count_reduce(flat_jaxpr.jaxpr)
     assert n_tree >= 2 * 40                  # two reductions per leaf
     assert n_flat <= 2 * layout.num_buffers  # two per bucket
+
+
+def test_flat_step_packs_mean_gradient_exactly_once():
+    """THE double-pack regression guard: tracing one flat-path step must
+    pack (flatten) each tree exactly once — FSDP-Norm packs g_j, the mean
+    gradient g, and the params (3 packs); ACCUM-NORM packs g and the
+    params (2).  The old tail packed g twice (once in the statistics,
+    once again inside the AdamW entry point)."""
+    from repro.distributed.train_step import (
+        make_fsdp_norm_step, make_accum_norm_step)
+    model, mesh, batch, set_mesh = _tiny_step_setup()
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+    for make, expected in ((make_fsdp_norm_step, 3),
+                           (make_accum_norm_step, 2)):
+        params = model.init(jax.random.PRNGKey(0))
+        opt = init_adamw_flat(params)
+        wrap, _, _ = make(model, AdamWConfig(), mesh, stats_impl="flat",
+                          params_like=params, jit=False)
+        fn = wrap(sds)
+        with set_mesh(mesh):
+            with count_packs() as packs:
+                jax.eval_shape(fn, params, opt, batch, jnp.float32(1e-3))
+        assert len(packs) == expected, (
+            f"{make.__name__}: {len(packs)} flatten calls per step "
+            f"(expected {expected}) — the mean gradient is being re-packed")
+
+
+def test_flat_moments_sharded_over_data_axes(subproc):
+    """Acceptance: with a 2-device data axis the flat moment buffers carry
+    data-axis PartitionSpecs (not P()) on BOTH step impls, and per-device
+    optimizer-state bytes are exactly half the replicated footprint."""
+    out = subproc("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.compat import set_mesh
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.launch.mesh import make_host_mesh
+from repro.distributed.train_step import (
+    make_fsdp_norm_step, make_accum_norm_step)
+from repro.optim.adamw import AdamWConfig, init_adamw_flat
+from repro.data.pipeline import MarkovTokens, make_batch
+from repro.core.schedule import BatchPlan
+
+cfg = get_smoke_config("llama3.2-1b")
+model = build_model(cfg)
+mesh = make_host_mesh(data=2, model=1)
+src = MarkovTokens(vocab_size=cfg.vocab_size, seed=0)
+plan = BatchPlan(global_batch=8, micro_batch=2, accum_steps=2, workers=2)
+batch = jax.tree.map(jnp.asarray, make_batch(src, 0, plan, 16))
+sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+for make in (make_fsdp_norm_step, make_accum_norm_step):
+    params = model.init(jax.random.PRNGKey(0))
+    opt = init_adamw_flat(params, shard_divisor=2)
+    wrap, _, o_specs = make(model, AdamWConfig(), mesh, stats_impl="flat",
+                            params_like=params)
+    with set_mesh(mesh):
+        _, o, _ = wrap(sds)(params, opt, batch, jnp.float32(1e-3))
+    for spec in o_specs["m"] + o_specs["v"]:
+        assert spec != P(), f"replicated moment spec: {spec}"
+        first = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+        assert "data" in first, spec
+    total = local = 0
+    for buf in o["m"] + o["v"]:
+        assert buf.size % 2 == 0, buf.size        # J-divisible buckets
+        dim0 = buf.sharding.spec[0] if buf.sharding.spec else None
+        assert dim0 not in (None,), f"unsharded live buffer: {buf.sharding}"
+        total += buf.size
+        local += buf.addressable_shards[0].data.size
+    assert local * 2 == total, (local, total)     # ~Jx memory saving, J=2
+print("SHARDED_FLAT_OK")
+""", devices=2)
+    assert "SHARDED_FLAT_OK" in out
 
 
 # ------------------------------------------------- interpret default ----

@@ -1,5 +1,6 @@
 from repro.core.schedule import (
-    BatchPlan, ConstantSchedule, StagewiseSchedule, round_plan)
+    BatchPlan, ConstantSchedule, StagewiseSchedule, quantize_to_ladder,
+    round_plan)
 
 
 def test_constant():
@@ -18,3 +19,24 @@ def test_stagewise_boundaries():
     assert s.plan_for(int(0.03 * total), total).global_batch == 32
     assert s.plan_for(int(0.9 * total), total).global_batch == 64
     assert s.plan_for(total - 1, total).global_batch == 64
+
+
+def _plan(gb, micro, accum, workers=1):
+    return BatchPlan(global_batch=gb, micro_batch=micro, accum_steps=accum,
+                     workers=workers)
+
+
+def test_quantize_unsorted_ladder_finds_eligible_rungs():
+    """Regression: the capped scan `break`s on the first rung above
+    max_global, which silently skipped every later (eligible) rung when a
+    programmatically-built ladder arrived unsorted — capacities are now
+    sorted at entry."""
+    unsorted = (_plan(64, 2, 32), _plan(4, 2, 2), _plan(16, 2, 8))
+    # request 10 with cap 32: rung 16 is eligible but sits AFTER the 64 rung
+    rung = quantize_to_ladder(10, unsorted, max_global=32)
+    assert rung.global_batch == 16
+    # uncapped: smallest covering rung, regardless of ladder order
+    assert quantize_to_ladder(10, unsorted).global_batch == 16
+    assert quantize_to_ladder(60, unsorted).global_batch == 64
+    # everything above the cap -> smallest rung, not an arbitrary first one
+    assert quantize_to_ladder(10, unsorted, max_global=2).global_batch == 4
