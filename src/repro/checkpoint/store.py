@@ -3,6 +3,16 @@
 Host-based (gathers to host then writes); fine for the CPU container and the
 paper's model sizes.  The tree is flattened to path-keyed arrays so restore
 does not depend on Python object identity.
+
+Flat-resident interop (DESIGN §10): a flat-resident job saves its raw param
+bucket buffers (keys ``params/0..N``) plus the layout RECIPE in metadata
+(``flat_params``: bucket_bytes + shard_divisor — `FlatLayout.from_tree` is
+deterministic given those and the params structure).  `restore_params` /
+`restore_params_flat` read a checkpoint of EITHER residency into the
+caller's residency, bit-exactly, even across backends with different
+default bucket sizes: the reader rebuilds the writer's layout from the
+metadata, unflattens, and (for a flat reader) re-flattens at its own
+layout — both hops are exact slices/concats.
 """
 
 from __future__ import annotations
@@ -62,6 +72,76 @@ def restore_checkpoint(directory: str, step: int, like_tree):
     for path, _ in paths:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
         leaves.append(restored_flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves), _read_meta(
+        directory, step)
+
+
+# ------------------------------------------- flat-resident interop ----
+
+FLAT_PARAMS_META = "flat_params"
+
+
+def flat_params_metadata(layout) -> dict:
+    """The layout recipe a reader needs to rebuild the EXACT `FlatLayout`
+    of a flat-resident params checkpoint: `FlatLayout.from_tree` is
+    deterministic given the params structure plus these two knobs."""
+    return {"bucket_bytes": layout.bucket_bytes,
+            "shard_divisor": layout.shard_divisor}
+
+
+def _read_meta(directory: str, step: int) -> dict:
     meta_path = os.path.join(directory, f"ckpt_{step:08d}.json")
-    metadata = json.load(open(meta_path)) if os.path.exists(meta_path) else {}
-    return jax.tree_util.tree_unflatten(treedef, leaves), metadata
+    return json.load(open(meta_path)) if os.path.exists(meta_path) else {}
+
+
+def restore_params(directory: str, step: int, params_like):
+    """The checkpoint's ``params`` entry as a pytree shaped like
+    `params_like`, whatever residency it was saved in (bit-exact).
+
+    Tree-resident checkpoints restore leaf-by-leaf (leaves cast to the
+    reader's dtypes, like `restore_checkpoint`); flat-resident ones
+    (metadata carries ``flat_params``) rebuild the writer's layout from
+    `params_like` and unflatten the raw bucket buffers — there the
+    reader's dtypes must MATCH the checkpoint's (buffer bucketing is
+    dtype-grouped, so a cross-dtype flat restore has no well-defined
+    layout; the dtype check below turns that into a loud error instead of
+    a silently mis-grouped tree).  Returns (tree, metadata)."""
+    metadata = _read_meta(directory, step)
+    fl = metadata.get(FLAT_PARAMS_META)
+    if fl:
+        from repro.distributed.flatbuf import FlatLayout
+        path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+        data = np.load(path)
+        layout = FlatLayout.from_tree(
+            params_like, bucket_bytes=int(fl["bucket_bytes"]),
+            shard_divisor=int(fl["shard_divisor"]))
+        buffers = []
+        for i, (size, dt) in enumerate(zip(layout.buffer_sizes,
+                                           layout.buffer_dtypes)):
+            arr = data[f"params/{i}"]
+            assert arr.shape == (size,), (i, arr.shape, size)
+            assert arr.dtype == dt, (
+                f"buffer {i}: checkpoint dtype {arr.dtype} != reader's "
+                f"layout dtype {dt} — flat-resident restore requires "
+                f"matching param dtypes")
+            buffers.append(arr)
+        return layout.unflatten(buffers), metadata
+    # tree-resident: delegate to the standard leaf-keyed restore on the
+    # params subtree (one implementation of the key format and the
+    # shape/dtype handling)
+    tree, metadata = restore_checkpoint(directory, step,
+                                        {"params": params_like})
+    return tree["params"], metadata
+
+
+def restore_params_flat(directory: str, step: int, params_like, *,
+                        bucket_bytes: int | None = None,
+                        shard_divisor: int = 1):
+    """`FlatParams` at the CALLER's layout (its backend's bucket size / its
+    mesh's worker count) from a checkpoint of either residency — the
+    unflatten-via-writer-layout → flatten-via-reader-layout round trip is
+    bit-exact.  Returns (FlatParams, metadata)."""
+    from repro.distributed.flatbuf import FlatParams
+    tree, metadata = restore_params(directory, step, params_like)
+    return (FlatParams.from_tree(tree, bucket_bytes=bucket_bytes,
+                                 shard_divisor=shard_divisor), metadata)

@@ -106,19 +106,31 @@ def worker_variance_stats_flat(local_grad, mean_grad, data_axes, *,
     mean gradient is packed exactly ONCE per step (the flat-tail
     double-pack regression, DESIGN §9)."""
     from repro.distributed.flatbuf import FlatLayout
-    from repro.kernels import ops
     if layout is None:
         layout = FlatLayout.from_tree(mean_grad)
     local_b = layout.flatten(local_grad)
     mean_b = layout.flatten(mean_grad)
+    var_l1, gsq = worker_variance_stats_buffers(local_b, mean_b, data_axes)
+    return var_l1, gsq, mean_b
+
+
+def worker_variance_stats_buffers(local_buffers, mean_buffers, data_axes):
+    """Born-flat variant of `worker_variance_stats_flat` (DESIGN §10): the
+    per-worker and mean gradients ALREADY live as bucketed flat buffers —
+    flat-resident parameters differentiate w.r.t. the buffers, so autodiff
+    emits gradient buffers directly and this path performs NO pack.  Shard
+    padding is zero in every gradient buffer (the pad is never referenced
+    by a slot, so its cotangent is the adjoint's zero fill) and contributes
+    nothing to either sum.  Returns (var_l1, grad_sqnorm)."""
+    from repro.kernels import ops
     local_sq = jnp.zeros((), jnp.float32)
     gsq = jnp.zeros((), jnp.float32)
-    for lb, mb in zip(local_b, mean_b):
+    for lb, mb in zip(local_buffers, mean_buffers):
         d, q = ops.stats_flat(lb, mb)
         local_sq += d
         gsq += q
     var_l1 = jax.lax.pmean(local_sq, data_axes)
-    return var_l1, gsq, mean_b
+    return var_l1, gsq
 
 
 def paper_faithful_worker_variance(local_grad, mean_grad, data_axes):

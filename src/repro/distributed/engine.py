@@ -106,6 +106,10 @@ class BucketedEngine:
         if not ladder:
             raise ValueError("bucket ladder must have at least one rung")
         self._wrap = wrap
+        # the builder's shared per-step-signature FlatLayout (None on the
+        # pure tree path): pinned at construction so every rung this engine
+        # compiles provably reuses ONE layout (DESIGN §9/§10)
+        self._flat_layout = getattr(wrap, "flat_layout", None)
         self.ladder = tuple(sorted(ladder, key=lambda p: p.global_batch))
         self._mesh = mesh
         self._params_like = params_like
@@ -140,7 +144,16 @@ class BucketedEngine:
 
     def _build(self, batch_like):
         with self._mesh_ctx():
-            return self._wrap(batch_like)
+            fn = self._wrap(batch_like)
+        lay = getattr(self._wrap, "flat_layout", None)
+        if lay is not self._flat_layout:
+            raise RuntimeError(
+                "step builder changed its FlatLayout across bucket "
+                "signatures — the per-step-signature layout must be built "
+                "once and reused for every ladder rung (DESIGN §9/§10), or "
+                "flat-resident params/moments from one rung would not feed "
+                "the step compiled for the next")
+        return fn
 
     def get_step(self, batch):
         """The compiled step for this (padded) batch's signature; traces at

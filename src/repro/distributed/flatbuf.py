@@ -21,7 +21,12 @@ kernels instead:
   (per-bucket `pad` recorded in `buffer_pads`), so the buffers carry real
   data-axis `PartitionSpec`s over a J-worker mesh instead of being
   replicated — the padded tail never overlaps a slot, contributes nothing
-  to any reduction, and round trips bit-exactly.
+  to any reduction, and round trips bit-exactly;
+* `unflatten_for_grad` is the flat-RESIDENT entry point (DESIGN §10): a
+  differentiable unflatten whose VJP packs the leaf cotangents straight
+  back into per-bucket buffers, so a loss composed with it yields
+  gradients that are *born flat* — no materialized gradient pytree, no
+  per-step re-pack.  `FlatParams` is the host-side residency wrapper.
 
 The layout is a trace-time Python object (shapes/dtypes only): build it from
 concrete arrays or `ShapeDtypeStruct`s, reuse it across congruent trees
@@ -99,7 +104,8 @@ class FlatLayout:
     """Static packing of a pytree into dtype-homogeneous bucketed buffers."""
 
     def __init__(self, treedef, slots, buffer_sizes, buffer_dtypes,
-                 buffer_pads=None, shard_divisor: int = 1):
+                 buffer_pads=None, shard_divisor: int = 1,
+                 bucket_bytes: int | None = None):
         self.treedef = treedef
         self.slots = tuple(slots)                  # ordered by leaf_index
         self.buffer_sizes = tuple(buffer_sizes)    # INCLUDING shard padding
@@ -107,9 +113,22 @@ class FlatLayout:
         self.buffer_pads = (tuple(buffer_pads) if buffer_pads is not None
                             else (0,) * len(buffer_sizes))
         self.shard_divisor = shard_divisor
+        self.bucket_bytes = bucket_bytes           # the from_tree recipe knob
         self.num_buffers = len(buffer_sizes)
         self.num_leaves = len(self.slots)
         self.total_size = sum(buffer_sizes)
+        self._unflat_grad = None                   # lazy custom-vjp unflatten
+
+    def _cmp_key(self):
+        return (self.treedef, self.slots, self.buffer_sizes,
+                self.buffer_dtypes, self.buffer_pads, self.shard_divisor)
+
+    def __eq__(self, other):
+        return (isinstance(other, FlatLayout)
+                and self._cmp_key() == other._cmp_key())
+
+    def __hash__(self):
+        return hash(self._cmp_key())
 
     @classmethod
     def from_tree(cls, tree, bucket_bytes: int | None = None,
@@ -161,7 +180,8 @@ class FlatLayout:
                 # still a real bucket, or its slots would dangle
                 close(cur_off, dt)
         ordered = [slots[i] for i in range(len(leaves))]
-        return cls(treedef, ordered, sizes, dtypes, pads, shard_divisor)
+        return cls(treedef, ordered, sizes, dtypes, pads, shard_divisor,
+                   bucket_bytes)
 
     # ------------------------------------------------------------ pack ----
 
@@ -179,6 +199,13 @@ class FlatLayout:
                 f"tree has {len(leaves)} leaves, layout expects {self.num_leaves}")
         if _PACK_TRACE.active is not None:
             _PACK_TRACE.active.append(self.num_leaves)
+        return self._pack(leaves)
+
+    def _pack(self, leaves):
+        """Core packing (ravel + per-bucket concat + zero pad), shared by
+        `flatten` and the `unflatten_for_grad` adjoint.  NOT counted by
+        `count_packs()` — callers that enter the flat layout from a
+        materialized pytree go through `flatten`, which is."""
         parts: list = [[] for _ in range(self.num_buffers)]
         for slot, leaf in zip(self.slots, leaves):
             if tuple(leaf.shape) != slot.shape:
@@ -214,6 +241,59 @@ class FlatLayout:
             for s in self.slots]
         return self.treedef.unflatten(leaves)
 
+    # ------------------------------------------------- flat residency ----
+
+    def unflatten_for_grad(self, buffers):
+        """Differentiable unflatten for flat-RESIDENT parameters (DESIGN
+        §10): forward is exactly `unflatten`, but the VJP is overridden so
+        the leaf cotangents are packed straight into per-bucket buffers
+        (one ravel+concat per bucket, shard pad zero-filled) instead of
+        the generic slice adjoint XLA would emit for `unflatten` (a
+        zero-pad of every leaf cotangent to full bucket size + an N-way
+        add).  A loss composed with this function therefore yields
+        gradients that are *born flat*: ``jax.grad(lambda bufs:
+        loss(layout.unflatten_for_grad(bufs)))`` returns bucket buffers
+        bit-identical to ``layout.flatten(jax.grad(loss)(tree))``.
+
+        Takes (and differentiates w.r.t.) a tuple of buffers.  The
+        explicit adjoint is deliberately NOT counted by `count_packs()`:
+        it replaces the autodiff transpose inside the backward pass — the
+        per-step re-pack of a materialized gradient pytree is exactly the
+        cost flat residency deletes."""
+        if self._unflat_grad is None:
+            @jax.custom_vjp
+            def unflat(bufs):
+                return self.unflatten(list(bufs))
+
+            def fwd(bufs):
+                return self.unflatten(list(bufs)), None
+
+            def bwd(_, ct):
+                return (tuple(self._pack(jax.tree.leaves(ct))),)
+
+            unflat.defvjp(fwd, bwd)
+            self._unflat_grad = unflat
+        return self._unflat_grad(tuple(buffers))
+
+    def pack_cotangents(self, ct_tree):
+        """The pad-slice adjoint of `unflatten` applied manually: pack a
+        cotangent tree into per-bucket buffers (dtype taken from the
+        cotangents — e.g. f32 accumulators transpose through a bf16
+        layout's slots into f32 buffers, exactly like `flatten` packs f32
+        gradients of bf16 params; pads zero-filled).  `unflatten` is
+        linear, so this IS its transpose for any cotangent; the train
+        steps use it to transpose the whole accumulated gradient once per
+        step without downcasting to the param dtype (which a dtype-strict
+        `jax.vjp` would force).  Like `unflatten_for_grad`'s VJP, this is
+        NOT counted by `count_packs()` — it is the autodiff transpose,
+        not a host-level re-entry into the layout."""
+        leaves = jax.tree.leaves(ct_tree)
+        if len(leaves) != self.num_leaves:
+            raise ValueError(
+                f"cotangent tree has {len(leaves)} leaves, layout expects "
+                f"{self.num_leaves}")
+        return self._pack(leaves)
+
     # --------------------------------------------------------- helpers ----
 
     def zeros(self, dtype=jnp.float32):
@@ -228,6 +308,43 @@ def flatten_tree(tree, bucket_bytes: int | None = None,
     return layout, layout.flatten(tree)
 
 
-__all__ = ["FlatLayout", "Slot", "flatten_tree", "count_packs",
+@jax.tree_util.register_pytree_node_class
+class FlatParams:
+    """Host-side residency wrapper for flat-resident parameters (DESIGN §10):
+    a `FlatLayout` plus the live bucket buffers.
+
+    The train steps take and return the raw buffer tuple (`.buffers`) so
+    nothing exotic crosses the shard_map/jit boundary; this wrapper owns the
+    layout so the training loop, evaluation, and checkpointing can round-trip
+    to the pytree view (`to_tree`, bit-exact) and rebuild the residency on a
+    different backend bucket size (`from_tree`).  Registered as a pytree
+    (buffers are children, the layout is static aux data) so `jax.tree.map`
+    and friends treat it like any other container."""
+
+    __slots__ = ("layout", "buffers")
+
+    def __init__(self, layout: FlatLayout, buffers):
+        self.layout = layout
+        self.buffers = tuple(buffers)
+
+    @classmethod
+    def from_tree(cls, tree, bucket_bytes: int | None = None,
+                  shard_divisor: int = 1):
+        layout = FlatLayout.from_tree(tree, bucket_bytes, shard_divisor)
+        return cls(layout, layout.flatten(tree))
+
+    def to_tree(self):
+        """The pytree view (bit-exact; slices, no casts)."""
+        return self.layout.unflatten(list(self.buffers))
+
+    def tree_flatten(self):
+        return self.buffers, self.layout
+
+    @classmethod
+    def tree_unflatten(cls, layout, buffers):
+        return cls(layout, buffers)
+
+
+__all__ = ["FlatLayout", "FlatParams", "Slot", "flatten_tree", "count_packs",
            "default_bucket_bytes", "DEFAULT_BUCKET_BYTES",
            "CPU_BUCKET_BYTES"]

@@ -103,6 +103,18 @@ def flat_buffer_specs(num_buffers: int, axes: tuple[str, ...]) -> tuple[P, ...]:
     return tuple(spec for _ in range(num_buffers))
 
 
+def gather_flat_buffers(buffers, axes: tuple[str, ...]):
+    """All-gather each 1/J bucket shard back into the full buffer inside a
+    shard_map manual region (DESIGN §10 flat-resident params: the buffers
+    REST as their `P(axes)` worker shard and the loss needs the whole
+    parameter vector, so the FSDP param all-gather moves to the top of the
+    step and operates on buffers).  Tiled gather along the single bucket
+    dim, first data axis major — the same order `P(axes)` shards in."""
+    if not axes:
+        return list(buffers)
+    return [jax.lax.all_gather(b, axes, tiled=True) for b in buffers]
+
+
 def shard_flat_buffers(buffers, axes: tuple[str, ...]):
     """Constrain flat bucket buffers to their data-axis sharding (GSPMD
     steps; advisory outside a mesh context, like `maybe_shard`)."""
@@ -170,6 +182,7 @@ __all__ = [
     "FULL_FSDP_RULES",
     "manual_data_rules",
     "flat_buffer_specs",
+    "gather_flat_buffers",
     "shard_flat_buffers",
     "use_sharding_rules",
     "current_rules",

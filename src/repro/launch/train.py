@@ -43,7 +43,8 @@ from repro.launch.mesh import make_host_mesh, num_workers
 from repro.models import build_model
 from repro.optim.adamw import (
     AdamWConfig, init_adamw, init_adamw_flat, warmup_cosine)
-from repro.checkpoint.store import save_checkpoint
+from repro.checkpoint.store import (
+    FLAT_PARAMS_META, flat_params_metadata, save_checkpoint)
 
 
 @dataclass
@@ -54,6 +55,7 @@ class TrainJob:
     step_impl: str = "fsdp_norm"          # fsdp_norm | accum_norm
     variance_impl: str = "scalar"         # scalar | paper
     stats_impl: str = "tree"              # tree | flat (DESIGN §9 buffers)
+    params_impl: str = "tree"             # tree | flat (DESIGN §10 resident)
     eta: float = 0.2
     steps: int = 200
     total_samples: int | None = None      # stop criterion (paper trains by samples)
@@ -110,10 +112,6 @@ def run_training(job: TrainJob) -> dict:
     d = job.mesh_data or max(1, n_dev // job.mesh_model)
     mesh = make_host_mesh(data=d, model=job.mesh_model)
     workers = num_workers(mesh)
-    # flat moment buckets are padded to J-divisible sizes and SHARDED over
-    # the data axes (DESIGN §9) — the state layout must match the step's
-    opt_state = (init_adamw_flat(params, shard_divisor=workers)
-                 if job.stats_impl == "flat" else init_adamw(params))
 
     opt_cfg = AdamWConfig(lr=job.peak_lr, weight_decay=job.weight_decay,
                           grad_clip=job.grad_clip)
@@ -121,11 +119,25 @@ def run_training(job: TrainJob) -> dict:
         wrap, _, _ = make_fsdp_norm_step(model, opt_cfg, mesh,
                                          variance_impl=job.variance_impl,
                                          stats_impl=job.stats_impl,
+                                         params_impl=job.params_impl,
                                          params_like=params)
     else:
         wrap, _, _ = make_accum_norm_step(model, opt_cfg, mesh,
                                           stats_impl=job.stats_impl,
+                                          params_impl=job.params_impl,
                                           params_like=params)
+    # the ONE per-step-signature layout the builder compiled against —
+    # shared with the optimizer state, the residency conversion, and the
+    # checkpoint metadata (None on the pure tree path)
+    layout = wrap.flat_layout
+    # flat moment buckets are padded to J-divisible sizes and SHARDED over
+    # the data axes (DESIGN §9) — the state layout must match the step's
+    opt_state = (init_adamw_flat(params, shard_divisor=workers, layout=layout)
+                 if job.stats_impl == "flat" else init_adamw(params))
+    if job.params_impl == "flat":
+        # flat residency (DESIGN §10): the ONLY pack of the whole run —
+        # from here on gradients are born flat and params stay buffers
+        params = tuple(layout.flatten(params))
 
     if job.bucket_ladder == "off":
         ladder = None
@@ -205,7 +217,14 @@ def run_training(job: TrainJob) -> dict:
                             job.seq_len, extra_specs)
             vb = {k: jnp.asarray(v[0]) for k, v in vb.items()}
             if "eval" not in eval_fn:
-                eval_fn["eval"] = jax.jit(lambda p, b: model.loss(p, b)[0])
+                if job.params_impl == "flat":
+                    # unflatten INSIDE the jit: the tree view is sliced out
+                    # of the resident buffers, never materialized on host
+                    eval_fn["eval"] = jax.jit(
+                        lambda pb, b: model.loss(layout.unflatten(list(pb)),
+                                                 b)[0])
+                else:
+                    eval_fn["eval"] = jax.jit(lambda p, b: model.loss(p, b)[0])
             losses.append(float(eval_fn["eval"](params, vb)))
         return float(np.mean(losses))
 
@@ -287,13 +306,17 @@ def run_training(job: TrainJob) -> dict:
     if job.checkpoint_dir:
         meta = {"job": dataclasses.asdict(job)}
         if job.stats_impl == "flat":
-            # flat moments are raw bucketed buffers: their layout depends on
-            # the backend-resolved bucket size and the mesh's worker count,
-            # so record both — a reader on a different backend/mesh must
-            # rebuild the SAME FlatLayout to unflatten them
-            from repro.distributed.flatbuf import default_bucket_bytes
-            meta["flat_layout"] = {"bucket_bytes": default_bucket_bytes(),
-                                   "shard_divisor": workers}
+            # flat moments are raw bucketed buffers: record the STEP'S OWN
+            # layout recipe (bucket size + worker count) — a reader on a
+            # different backend/mesh must rebuild the SAME FlatLayout to
+            # unflatten them
+            meta["flat_layout"] = flat_params_metadata(layout)
+        if job.params_impl == "flat":
+            # flat-RESIDENT params save as raw buffers (params/0..N); the
+            # recipe lets any reader — tree-resident, or flat on another
+            # backend's bucket size — rebuild this exact layout and restore
+            # bit-exactly (checkpoint.store.restore_params[_flat])
+            meta[FLAT_PARAMS_META] = flat_params_metadata(layout)
         save_checkpoint(job.checkpoint_dir, step,
                         {"params": params, "opt": opt_state},
                         metadata=meta)
@@ -304,7 +327,9 @@ def run_training(job: TrainJob) -> dict:
         # surface as stats.warmup_failures rather than aborting the run
         engine.drain(raise_errors=False)
         history["engine"] = engine.stats.as_dict()
-    history["final_params"] = params
+    # callers (benchmarks, examples) consume the pytree view
+    history["final_params"] = (layout.unflatten(list(params))
+                               if job.params_impl == "flat" else params)
     return history
 
 

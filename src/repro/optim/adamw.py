@@ -46,7 +46,7 @@ def init_adamw(params):
 
 def clip_by_global_norm(grads, max_norm: float):
     gnorm = jnp.sqrt(tree_sqnorm(grads))
-    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    scale = clip_scale_from_norm(gnorm, max_norm)
     return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
 
 
@@ -88,15 +88,17 @@ def adamw_update(params, grads, state, cfg: AdamWConfig, lr):
 
 # -------------------------------------------------- flat-buffer path ----
 
-def init_adamw_flat(params, *, shard_divisor: int = 1):
+def init_adamw_flat(params, *, shard_divisor: int = 1, layout=None):
     """Moments as flat f32 buffers (tuples) matching `FlatLayout.from_tree(
     params, shard_divisor=...)` — the layout is rebuilt deterministically, so
     it is never stored in the state.  `shard_divisor` must match the step's
     layout (the data-axis worker count J when the buckets are mesh-sharded,
     DESIGN §9): bucket sizes are padded to J-divisible so each worker holds
-    an exact 1/J moment shard."""
+    an exact 1/J moment shard.  Pass the step builder's shared `layout` to
+    skip the rebuild (it must have been built at the same divisor)."""
     from repro.distributed.flatbuf import FlatLayout
-    layout = FlatLayout.from_tree(params, shard_divisor=shard_divisor)
+    if layout is None:
+        layout = FlatLayout.from_tree(params, shard_divisor=shard_divisor)
     return {
         "m": tuple(layout.zeros(jnp.float32)),
         "v": tuple(layout.zeros(jnp.float32)),
@@ -104,22 +106,36 @@ def init_adamw_flat(params, *, shard_divisor: int = 1):
     }
 
 
-def flat_opt_state(params_like, state, *, shard_divisor: int = 1):
+def flat_opt_state(params_like, state, *, shard_divisor: int = 1, layout=None):
     """Convert a tree optimizer state to the flat layout (tests/migration)."""
     from repro.distributed.flatbuf import FlatLayout
-    layout = FlatLayout.from_tree(params_like, shard_divisor=shard_divisor)
+    if layout is None:
+        layout = FlatLayout.from_tree(params_like, shard_divisor=shard_divisor)
     return {"m": tuple(layout.flatten(state["m"])),
             "v": tuple(layout.flatten(state["v"])),
             "count": state["count"]}
 
 
-def unflat_opt_state(params_like, state, *, shard_divisor: int = 1):
+def unflat_opt_state(params_like, state, *, shard_divisor: int = 1,
+                     layout=None):
     """Inverse of `flat_opt_state` (bit-exact)."""
     from repro.distributed.flatbuf import FlatLayout
-    layout = FlatLayout.from_tree(params_like, shard_divisor=shard_divisor)
+    if layout is None:
+        layout = FlatLayout.from_tree(params_like, shard_divisor=shard_divisor)
     return {"m": layout.unflatten(list(state["m"])),
             "v": layout.unflatten(list(state["v"])),
             "count": state["count"]}
+
+
+def clip_scale_from_norm(grad_norm, grad_clip: float):
+    """THE global-norm clip multiplier formula — the single definition the
+    updates apply (`clip_by_global_norm`, `adamw_update_buffers`) and the
+    `clip_scale` step metric reports, so the differential oracle pins the
+    multiplier the update ACTUALLY used across every stats/params
+    residency combination."""
+    if grad_clip <= 0:
+        return jnp.ones((), jnp.float32)
+    return jnp.minimum(1.0, grad_clip / (grad_norm + 1e-12))
 
 
 def adamw_update_buffers(pb, gb, mb, vb, cfg: AdamWConfig, lr, count, *,
@@ -143,15 +159,12 @@ def adamw_update_buffers(pb, gb, mb, vb, cfg: AdamWConfig, lr, count, *,
     c1 = 1.0 - cfg.beta1 ** count.astype(jnp.float32)
     c2 = 1.0 - cfg.beta2 ** count.astype(jnp.float32)
 
-    if cfg.grad_clip > 0:
-        if grad_sqnorm is None:
-            grad_sqnorm = sum(
-                (jnp.sum(jnp.square(g.astype(jnp.float32))) for g in gb),
-                jnp.zeros((), jnp.float32))
-        scale = jnp.minimum(
-            1.0, cfg.grad_clip / (jnp.sqrt(grad_sqnorm) + 1e-12))
-    else:
-        scale = jnp.ones((), jnp.float32)
+    if cfg.grad_clip > 0 and grad_sqnorm is None:
+        grad_sqnorm = sum(
+            (jnp.sum(jnp.square(g.astype(jnp.float32))) for g in gb),
+            jnp.zeros((), jnp.float32))
+    scale = (clip_scale_from_norm(jnp.sqrt(grad_sqnorm), cfg.grad_clip)
+             if cfg.grad_clip > 0 else jnp.ones((), jnp.float32))
 
     outs = [ops.adamw_flat(p, g, m, v, lr=lr, beta1=cfg.beta1,
                            beta2=cfg.beta2, eps=cfg.eps,

@@ -106,3 +106,116 @@ except ImportError:
 
 
 __all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]
+
+
+# ================================================================ tests ====
+# Gradient-equivalence property (DESIGN §10): for randomized pytrees,
+# differentiating a loss THROUGH the flat buffers must equal packing the
+# tree gradient — grad(loss ∘ unflatten) on buffers == flatten(grad(loss)),
+# bit-compared per bucket.  This pins the pad-slice adjoint: the shard-pad
+# tail of every born-flat gradient buffer is exactly zero, both through the
+# explicit `unflatten_for_grad` VJP (one pack per bucket) and through
+# JAX's native slice adjoint of plain `unflatten` (per-slot pad + add).
+
+import numpy as _np
+
+import jax as _jax
+import jax.numpy as _jnp
+
+from repro.distributed.flatbuf import FlatLayout as _FlatLayout
+
+
+def _random_float_tree(seed: int, bucket_elems: int):
+    """Randomized pytree: mixed f32/bf16 leaves, size-0 leaves (1-D and
+    2-D), an oversized leaf (> bucket capacity, its own bucket), odd
+    shapes.  Float-only: the tree is differentiated."""
+    rng = _np.random.default_rng(seed)
+    dtypes = (_jnp.float32, _jnp.bfloat16)
+    tree = {}
+    n = int(rng.integers(2, 7))
+    for i in range(n):
+        kind = int(rng.integers(0, 5))
+        if kind == 0:
+            shape = (0,) if rng.integers(2) else (0, 3)
+        elif kind == 1:
+            shape = (int(bucket_elems * rng.uniform(1.25, 2.5)),)  # oversized
+        elif kind == 2:
+            shape = ()                                             # scalar
+        elif kind == 3:
+            shape = (int(rng.integers(1, 8)), int(rng.integers(1, 8)))
+        else:
+            shape = (int(rng.integers(1, 4 * bucket_elems)),)
+        dt = dtypes[int(rng.integers(len(dtypes)))]
+        tree[f"w{i}"] = _jnp.asarray(
+            rng.standard_normal(shape), _jnp.float32).astype(dt)
+    return tree
+
+
+def _leaf_losses(tree):
+    """Nonlinear scalar loss with position-dependent cotangents (a uniform
+    weight would let transposed/permuted adjoints slip through)."""
+    total = _jnp.zeros((), _jnp.float32)
+    for leaf in _jax.tree.leaves(tree):
+        x = leaf.astype(_jnp.float32)
+        w = (_jnp.arange(1, x.size + 1, dtype=_jnp.float32)
+             .reshape(x.shape if x.shape else ()))
+        total = total + _jnp.sum(_jnp.sin(x) * w)
+    return total
+
+
+def _denorm_zero(b):
+    """Map -0.0 to +0.0 (the native pad+add adjoint may flip the sign of a
+    zero cotangent; everything else must match bit-for-bit)."""
+    return _jnp.where(b == 0, _jnp.zeros_like(b), b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100_000),
+       bucket_bytes=st.sampled_from([64, 256, 4096]),
+       divisor=st.sampled_from([1, 2, 4, 7]))
+def test_grads_born_flat_equal_packed_tree_grads(seed, bucket_bytes, divisor):
+    tree = _random_float_tree(seed, max(1, bucket_bytes // 4))
+    layout = _FlatLayout.from_tree(tree, bucket_bytes=bucket_bytes,
+                                   shard_divisor=divisor)
+    bufs = tuple(layout.flatten(tree))
+
+    want = layout.flatten(_jax.grad(_leaf_losses)(tree))
+    got_custom = _jax.grad(
+        lambda b: _leaf_losses(layout.unflatten_for_grad(b)))(bufs)
+    got_native = _jax.grad(
+        lambda b: _leaf_losses(layout.unflatten(list(b))))(bufs)
+
+    assert len(want) == len(got_custom) == len(got_native) == layout.num_buffers
+    for i, (w, c, n) in enumerate(zip(want, got_custom, got_native)):
+        assert w.dtype == c.dtype == n.dtype, (i, w.dtype, c.dtype, n.dtype)
+        assert w.shape == c.shape == n.shape, (i, w.shape, c.shape, n.shape)
+        # explicit pack adjoint: bit-exact against the packed tree gradient
+        assert bool(_jnp.all(w == c)), f"buffer {i}: custom VJP diverged"
+        # native pad+add adjoint: bit-exact up to the sign of zero
+        assert bool(_jnp.all(_denorm_zero(w) == _denorm_zero(n))), \
+            f"buffer {i}: native slice adjoint diverged"
+        # the shard-pad tail of a born-flat gradient buffer is exactly zero
+        pad = layout.buffer_pads[i]
+        if pad:
+            assert bool(_jnp.all(c[w.size - pad:] == 0)), f"buffer {i} pad"
+            assert bool(_jnp.all(n[w.size - pad:] == 0)), f"buffer {i} pad"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100_000),
+       bucket_bytes=st.sampled_from([64, 1024]),
+       divisor=st.sampled_from([1, 3, 8]))
+def test_unflatten_for_grad_forward_is_unflatten(seed, bucket_bytes, divisor):
+    """The custom-vjp wrapper must not perturb the forward pass: its output
+    is bit-identical to plain `unflatten` (and round-trips the tree)."""
+    tree = _random_float_tree(seed, max(1, bucket_bytes // 4))
+    layout = _FlatLayout.from_tree(tree, bucket_bytes=bucket_bytes,
+                                   shard_divisor=divisor)
+    bufs = tuple(layout.flatten(tree))
+    via_grad = layout.unflatten_for_grad(bufs)
+    plain = layout.unflatten(list(bufs))
+    for a, b, orig in zip(_jax.tree.leaves(via_grad), _jax.tree.leaves(plain),
+                          _jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype == orig.dtype
+        assert a.shape == b.shape == orig.shape
+        assert bool(_jnp.all(a == b)) and bool(_jnp.all(a == orig))

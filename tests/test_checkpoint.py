@@ -3,7 +3,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.store import (
-    save_checkpoint, restore_checkpoint, latest_step)
+    FLAT_PARAMS_META, flat_params_metadata, save_checkpoint,
+    restore_checkpoint, restore_params, restore_params_flat, latest_step)
+from repro.distributed.flatbuf import FlatParams
 
 
 def test_roundtrip(tmp_path):
@@ -27,3 +29,67 @@ def test_latest_of_many(tmp_path):
     for s in (1, 5, 3):
         save_checkpoint(d, s, {"x": jnp.zeros(2)})
     assert latest_step(d) == 5
+
+
+# ---------------------------------------- flat-resident interop (§10) ----
+
+def _params_tree():
+    key = jax.random.PRNGKey(3)
+    return {"w": jax.random.normal(key, (37, 5)),
+            "blocks": [{"a": jax.random.normal(jax.random.PRNGKey(4), (23,))},
+                       {"a": jax.random.normal(jax.random.PRNGKey(5), (23,))}],
+        "scale": jnp.asarray(1.5, jnp.float32)}
+
+
+def test_flat_resident_checkpoint_restores_into_tree_job(tmp_path):
+    """A flat-resident checkpoint (one bucket_bytes/shard_divisor) restores
+    BIT-exactly into a tree-resident job via the recorded layout recipe."""
+    tree = _params_tree()
+    fp = FlatParams.from_tree(tree, bucket_bytes=256, shard_divisor=4)
+    d = str(tmp_path)
+    save_checkpoint(d, 7, {"params": fp.buffers, "opt": {"count": jnp.zeros((), jnp.int32)}},
+                    metadata={FLAT_PARAMS_META: flat_params_metadata(fp.layout)})
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = restore_params(d, 7, like)
+    assert meta[FLAT_PARAMS_META] == {"bucket_bytes": 256, "shard_divisor": 4}
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_resident_checkpoint_restores_across_bucket_sizes(tmp_path):
+    """A flat-resident checkpoint restores bit-exactly into a flat-resident
+    job on a DIFFERENT backend bucket size / mesh divisor: the reader
+    rebuilds the writer's layout from metadata, unflattens, and re-packs
+    at its own layout."""
+    tree = _params_tree()
+    writer = FlatParams.from_tree(tree, bucket_bytes=256, shard_divisor=4)
+    d = str(tmp_path)
+    save_checkpoint(d, 3, {"params": writer.buffers},
+                    metadata={FLAT_PARAMS_META:
+                              flat_params_metadata(writer.layout)})
+    reader, _ = restore_params_flat(d, 3, jax.tree.map(jnp.zeros_like, tree),
+                                    bucket_bytes=64, shard_divisor=2)
+    assert reader.layout.bucket_bytes == 64
+    assert reader.layout.shard_divisor == 2
+    assert reader.layout.buffer_sizes != writer.layout.buffer_sizes
+    want = FlatParams.from_tree(tree, bucket_bytes=64, shard_divisor=2)
+    assert len(reader.buffers) == len(want.buffers)
+    for a, b in zip(reader.buffers, want.buffers):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(reader.to_tree()), jax.tree.leaves(tree)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tree_checkpoint_restores_into_flat_job(tmp_path):
+    """The reverse hop: a tree-resident checkpoint loads into a
+    flat-resident job (no flat metadata -> leaf-keyed restore + pack)."""
+    tree = _params_tree()
+    d = str(tmp_path)
+    save_checkpoint(d, 11, {"params": tree})
+    fp, meta = restore_params_flat(d, 11, jax.tree.map(jnp.zeros_like, tree),
+                                   bucket_bytes=128, shard_divisor=3)
+    assert FLAT_PARAMS_META not in meta
+    for a, b in zip(jax.tree.leaves(fp.to_tree()), jax.tree.leaves(tree)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

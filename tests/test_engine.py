@@ -365,6 +365,50 @@ def test_get_step_concurrent_callers_compile_once():
     assert len({id(fn) for fn in results}) == 1   # everyone got THE step
 
 
+def test_flat_resident_layout_reused_across_rungs_zero_packs():
+    """DESIGN §10 engine invariant: a flat-resident step builder exposes ONE
+    `FlatLayout` (`wrap.flat_layout`), every ladder rung the engine compiles
+    reuses it (the engine asserts identity at build time), and tracing the
+    step at EACH rung performs zero flatten packs — buffers from one rung
+    feed the step compiled for the next with no residency conversion."""
+    from repro.compat import set_mesh
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.launch.mesh import make_host_mesh
+    from repro.distributed.train_step import make_accum_norm_step
+    from repro.distributed.flatbuf import count_packs
+    from repro.optim.adamw import AdamWConfig, init_adamw_flat
+
+    cfg = get_smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    mesh = make_host_mesh(data=1, model=1)
+    params = model.init(jax.random.PRNGKey(0))
+    wrap, _, _ = make_accum_norm_step(model, AdamWConfig(), mesh,
+                                      stats_impl="flat", params_impl="flat",
+                                      params_like=params)
+    layout = wrap.flat_layout
+    assert layout is not None
+    opt = init_adamw_flat(params, layout=layout)
+    pb = tuple(layout.flatten(params))
+
+    ladder = parse_ladder("2:1,2:2", workers=1)
+    engine = BucketedEngine(wrap, ladder, mesh=mesh)
+    src = MarkovTokens(vocab_size=cfg.vocab_size, seed=0)
+    with set_mesh(mesh):
+        for rung in ladder:
+            batch = jax.tree.map(jnp.asarray,
+                                 make_batch(src, 0, rung, seq_len=16))
+            fn = engine.get_step(batch)
+            assert wrap.flat_layout is layout      # one layout, every rung
+            with count_packs() as packs:           # jit traces on first call
+                pb, opt, m = fn(pb, opt, batch, jnp.float32(1e-3))
+            assert len(packs) == 0, (
+                f"rung {rung.global_batch}: {len(packs)} packs in a "
+                "flat-resident steady-state step")
+            assert np.isfinite(float(m["loss"]))
+    assert engine.stats.compiles == len(ladder)
+
+
 def test_stagewise_stage_above_max_global_trains():
     """Regression: a stagewise stage configured above max_global_batch must
     ride the auto ladder's extended top rung, not crash in pad_to_bucket."""

@@ -176,6 +176,24 @@ def test_layout_validation_errors():
         layout.unflatten([jnp.zeros((7,))])               # wrong buffers
 
 
+def test_pack_cotangents_keeps_f32_through_low_precision_layout():
+    """The manual unflatten adjoint must NOT downcast: f32-accumulated
+    gradients of bf16 params transpose through the bf16 layout's slots
+    into f32 buffers bit-identical to `flatten` of the same f32 tree
+    (the dtype-strict jax.vjp route would have quantized them to bf16)."""
+    params = {"a": jnp.ones((9, 3), jnp.bfloat16), "b": jnp.ones((7,))}
+    layout = FlatLayout.from_tree(params, shard_divisor=4)
+    g32 = _randlike(0, jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params))
+    got = layout.pack_cotangents(g32)
+    want = layout.flatten(g32)
+    for a, b in zip(got, want):
+        assert a.dtype == jnp.float32
+        assert bool(jnp.all(a == b))
+    with pytest.raises(ValueError):
+        layout.pack_cotangents({"a": jnp.zeros((9, 3))})   # wrong leaf count
+
+
 # ------------------------------------------------------ fused stats ----
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -353,29 +371,50 @@ def test_flat_tail_op_count_scales_with_buckets_not_leaves():
     assert n_flat <= 2 * layout.num_buffers  # two per bucket
 
 
-def test_flat_step_packs_mean_gradient_exactly_once():
-    """THE double-pack regression guard: tracing one flat-path step must
-    pack (flatten) each tree exactly once — FSDP-Norm packs g_j, the mean
-    gradient g, and the params (3 packs); ACCUM-NORM packs g and the
-    params (2).  The old tail packed g twice (once in the statistics,
-    once again inside the AdamW entry point)."""
+@pytest.mark.parametrize("step_impl,stats_impl,params_impl,expected", [
+    # flat STATS on tree-resident params (DESIGN §9): FSDP-Norm packs g_j,
+    # the mean gradient g, and the params (3); ACCUM-NORM packs g and the
+    # params (2).  The old tail packed g twice — THE double-pack regression.
+    ("fsdp_norm", "flat", "tree", 3),
+    ("accum_norm", "flat", "tree", 2),
+    # flat-RESIDENT params (DESIGN §10): gradients are born flat through
+    # `unflatten_for_grad`, params never leave buffer form — the
+    # steady-state step performs ZERO flatten packs.
+    ("fsdp_norm", "flat", "flat", 0),
+    ("accum_norm", "flat", "flat", 0),
+    # tree-oracle tail over flat-resident params: the one pack is the
+    # updated param tree re-entering residency.
+    ("fsdp_norm", "tree", "flat", 1),
+    ("accum_norm", "tree", "flat", 1),
+])
+def test_step_pack_count(step_impl, stats_impl, params_impl, expected):
+    """THE pack-count regression guard: tracing one step must show exactly
+    the packs its residency combination requires — 3/2 for the flat-stats
+    path (mean gradient packed exactly once), and ZERO for the
+    flat-resident steady state (so neither the PR 3 double-pack bug class
+    nor a regression to re-packing born-flat gradients can recur)."""
     from repro.distributed.train_step import (
         make_fsdp_norm_step, make_accum_norm_step)
     model, mesh, batch, set_mesh = _tiny_step_setup()
     sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
-    for make, expected in ((make_fsdp_norm_step, 3),
-                           (make_accum_norm_step, 2)):
-        params = model.init(jax.random.PRNGKey(0))
-        opt = init_adamw_flat(params)
-        wrap, _, _ = make(model, AdamWConfig(), mesh, stats_impl="flat",
-                          params_like=params, jit=False)
-        fn = wrap(sds)
-        with set_mesh(mesh):
-            with count_packs() as packs:
-                jax.eval_shape(fn, params, opt, batch, jnp.float32(1e-3))
-        assert len(packs) == expected, (
-            f"{make.__name__}: {len(packs)} flatten calls per step "
-            f"(expected {expected}) — the mean gradient is being re-packed")
+    make = (make_fsdp_norm_step if step_impl == "fsdp_norm"
+            else make_accum_norm_step)
+    params = model.init(jax.random.PRNGKey(0))
+    wrap, _, _ = make(model, AdamWConfig(), mesh, stats_impl=stats_impl,
+                      params_impl=params_impl, params_like=params, jit=False)
+    opt = (init_adamw_flat(params, layout=wrap.flat_layout)
+           if stats_impl == "flat" else init_adamw(params))
+    if params_impl == "flat":
+        # entering residency packs once, OUTSIDE the step — host-side cost,
+        # paid once per run, not per step
+        params = tuple(wrap.flat_layout.flatten(params))
+    fn = wrap(sds)
+    with set_mesh(mesh):
+        with count_packs() as packs:
+            jax.eval_shape(fn, params, opt, batch, jnp.float32(1e-3))
+    assert len(packs) == expected, (
+        f"{step_impl}/{stats_impl}/{params_impl}: {len(packs)} flatten "
+        f"calls per step (expected {expected})")
 
 
 def test_flat_moments_sharded_over_data_axes(subproc):

@@ -1,0 +1,197 @@
+"""Differential oracle (DESIGN §10 acceptance): every {stats_impl} ×
+{params_impl} residency combination of both distributed train steps must
+reproduce the tree/tree reference trajectory — per-step loss, var_l1,
+grad_sqnorm, clip_scale, and the final parameters — to ≤1e-5 over 5 steps
+on the same seed and batch stream.
+
+The tree/tree path is the oracle; flat-resident params (gradients born
+flat through `unflatten_for_grad`) and the fused flat statistics tail must
+be numerically invisible.  A 2-device variant runs the same oracle on a
+data=2 mesh under the CI multi-device job (`XLA_FLAGS=
+--xla_force_host_platform_device_count=2`), where the flat-resident param
+buffers actually REST as their 1/J shard.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import set_mesh
+from repro.configs import get_smoke_config
+from repro.core.schedule import BatchPlan
+from repro.data.pipeline import MarkovTokens, make_batch
+from repro.distributed.train_step import (
+    make_fsdp_norm_step, make_accum_norm_step)
+from repro.launch.mesh import make_host_mesh, num_workers
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig, init_adamw, init_adamw_flat
+
+STEPS = 5
+METRIC_KEYS = ("loss", "var_l1", "grad_sqnorm", "clip_scale")
+COMBOS = [(s, p) for s in ("tree", "flat") for p in ("tree", "flat")]
+
+
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _run(step_impl: str, stats_impl: str, params_impl: str, data: int = 1):
+    """5 deterministic steps; returns (per-step metric dicts, final param
+    tree) — flat-resident runs convert back to the pytree view at the end."""
+    cfg = get_smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    mesh = make_host_mesh(data=data, model=1)
+    J = num_workers(mesh)
+    src = MarkovTokens(vocab_size=cfg.vocab_size, seed=0)
+    plan = BatchPlan(global_batch=4 * J, micro_batch=2, accum_steps=2,
+                     workers=J)
+    make = (make_fsdp_norm_step if step_impl == "fsdp_norm"
+            else make_accum_norm_step)
+    params = model.init(jax.random.PRNGKey(0))
+    wrap, _, _ = make(model, AdamWConfig(), mesh, stats_impl=stats_impl,
+                      params_impl=params_impl, params_like=params)
+    layout = wrap.flat_layout
+    opt = (init_adamw_flat(params, shard_divisor=J, layout=layout)
+           if stats_impl == "flat" else init_adamw(params))
+    if params_impl == "flat":
+        params = tuple(layout.flatten(params))
+    batches = [jax.tree.map(jnp.asarray, make_batch(src, t, plan, 16))
+               for t in range(STEPS)]
+    traj = []
+    with set_mesh(mesh):
+        fn = wrap(_sds(batches[0]))
+        for t in range(STEPS):
+            params, opt, m = fn(params, opt, batches[t], jnp.float32(1e-3))
+            traj.append({k: float(m[k]) for k in METRIC_KEYS})
+    final = (layout.unflatten(list(params)) if params_impl == "flat"
+             else params)
+    return traj, final
+
+
+def _assert_matches_oracle(oracle, candidate, tag: str):
+    o_traj, o_final = oracle
+    c_traj, c_final = candidate
+    for t, (o, c) in enumerate(zip(o_traj, c_traj)):
+        for k in METRIC_KEYS:
+            np.testing.assert_allclose(
+                o[k], c[k], rtol=1e-5, atol=1e-7,
+                err_msg=f"{tag}: step {t} metric {k}")
+    for a, b in zip(jax.tree.leaves(o_final), jax.tree.leaves(c_final)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-5, atol=1e-6, err_msg=f"{tag}: final params")
+
+
+@pytest.mark.parametrize("step_impl", ["fsdp_norm", "accum_norm"])
+def test_differential_oracle_all_residency_combos(step_impl):
+    """Acceptance: all {stats_impl}×{params_impl} combinations match the
+    tree/tree oracle to ≤1e-5 over 5 steps (loss, var_l1, grad_sqnorm,
+    clip_scale, and final params)."""
+    oracle = _run(step_impl, "tree", "tree")
+    for stats_impl, params_impl in COMBOS[1:]:
+        cand = _run(step_impl, stats_impl, params_impl)
+        _assert_matches_oracle(
+            oracle, cand, f"{step_impl}/{stats_impl}/{params_impl}")
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (CI multi-device job)")
+@pytest.mark.parametrize("step_impl", ["fsdp_norm", "accum_norm"])
+def test_differential_oracle_two_device(step_impl):
+    """The same oracle on a data=2 mesh: the flat-resident param buffers
+    rest as real 1/J shards, the FSDP-Norm manual region all-gathers them,
+    and every residency combination still matches tree/tree."""
+    oracle = _run(step_impl, "tree", "tree", data=2)
+    for stats_impl, params_impl in COMBOS[1:]:
+        cand = _run(step_impl, stats_impl, params_impl, data=2)
+        _assert_matches_oracle(
+            oracle, cand, f"2dev/{step_impl}/{stats_impl}/{params_impl}")
+
+
+def test_flat_resident_param_specs_two_device(subproc):
+    """Flat-resident param-buffer PartitionSpecs on a 2-device data mesh:
+    both builders return per-bucket `P(('data',))` param specs, the live
+    updated buffers actually carry the sharding (FSDP-Norm params REST as
+    the 1/J shard — per-device param bytes halve), and a flat/flat step
+    matches tree/tree on the same mesh."""
+    out = subproc("""
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.compat import set_mesh
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.launch.mesh import make_host_mesh
+from repro.distributed.train_step import (
+    make_fsdp_norm_step, make_accum_norm_step)
+from repro.optim.adamw import AdamWConfig, init_adamw, init_adamw_flat
+from repro.data.pipeline import MarkovTokens, make_batch
+from repro.core.schedule import BatchPlan
+
+cfg = get_smoke_config("llama3.2-1b")
+model = build_model(cfg)
+mesh = make_host_mesh(data=2, model=1)
+src = MarkovTokens(vocab_size=cfg.vocab_size, seed=0)
+plan = BatchPlan(global_batch=8, micro_batch=2, accum_steps=2, workers=2)
+batch = jax.tree.map(jnp.asarray, make_batch(src, 0, plan, 16))
+sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch)
+for make in (make_fsdp_norm_step, make_accum_norm_step):
+    ref = None
+    for stats_impl, params_impl in (("tree", "tree"), ("flat", "flat")):
+        params = model.init(jax.random.PRNGKey(0))
+        wrap, p_specs, _ = make(model, AdamWConfig(), mesh,
+                                stats_impl=stats_impl,
+                                params_impl=params_impl, params_like=params)
+        layout = wrap.flat_layout
+        if params_impl == "flat":
+            assert len(p_specs) == layout.num_buffers
+            for spec in p_specs:
+                assert spec != P(), f"replicated param-buffer spec: {spec}"
+                first = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+                assert "data" in first, spec
+            opt = init_adamw_flat(params, shard_divisor=2, layout=layout)
+            params = tuple(layout.flatten(params))
+        else:
+            opt = init_adamw(params)
+        with set_mesh(mesh):
+            p, o, m = wrap(sds)(params, opt, batch, jnp.float32(1e-3))
+        if params_impl == "flat":
+            total = local = 0
+            for buf in p:
+                assert buf.size % 2 == 0, buf.size     # J-divisible buckets
+                spec0 = buf.sharding.spec[0] if buf.sharding.spec else None
+                if make is make_fsdp_norm_step:
+                    assert spec0 is not None, f"unsharded buffer: {buf.sharding}"
+                total += buf.size
+                local += buf.addressable_shards[0].data.size
+            if make is make_fsdp_norm_step:
+                assert local * 2 == total, (local, total)  # params rest at 1/J
+            p = layout.unflatten(list(p))
+        if ref is None:
+            ref = (p, m)
+        else:
+            for k in ("loss", "var_l1", "grad_sqnorm", "clip_scale"):
+                np.testing.assert_allclose(float(ref[1][k]), float(m[k]),
+                                           rtol=1e-5, atol=1e-7, err_msg=k)
+            for a, b in zip(jax.tree.leaves(ref[0]), jax.tree.leaves(p)):
+                np.testing.assert_allclose(np.asarray(a, np.float32),
+                                           np.asarray(b, np.float32),
+                                           rtol=1e-5, atol=1e-6)
+print("FLAT_RESIDENT_2DEV_OK")
+""", devices=2)
+    assert "FLAT_RESIDENT_2DEV_OK" in out
+
+
+def test_params_impl_validation():
+    cfg = get_smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    mesh = make_host_mesh(data=1, model=1)
+    with pytest.raises(ValueError):
+        make_fsdp_norm_step(model, AdamWConfig(), mesh, params_impl="bogus")
+    with pytest.raises(ValueError):
+        make_fsdp_norm_step(model, AdamWConfig(), mesh, params_impl="flat",
+                            variance_impl="paper")
+    with pytest.raises(ValueError):
+        make_accum_norm_step(model, AdamWConfig(), mesh, params_impl="nope")
