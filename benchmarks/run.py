@@ -156,8 +156,13 @@ def bench_engine_cache(steps):
     """Recompile savings of the bucketed engine (DESIGN §8): the same
     adaptive 4→64 schedule with the bucket ladder on vs off, plus the
     AOT-warmup variant.  Derived columns: traces compiled, cache hit rate,
-    padding waste, wall seconds."""
+    padding waste, wall seconds.  The ladder-on walls also land in
+    BENCH_step.json['warmup_overlap'] — what overlapping the next rung's
+    compile with training saves end-to-end — and a 2-process
+    file-coordinated run emits the per-rank barrier-wait timings
+    (BENCH_step.json['coordination'], DESIGN §8.1)."""
     from repro.launch.train import TrainJob, run_training, summarize
+    walls = {}
     for tag, ladder, warm in (("ladder_auto", "auto", False),
                               ("ladder_auto_aot", "auto", True),
                               ("ladder_off", "off", False)):
@@ -169,11 +174,78 @@ def bench_engine_cache(steps):
         t0 = time.time()
         h = run_training(job)
         s = summarize(h)
+        walls[tag] = round(time.time() - t0, 3)
         payload = _engine_payload(s) or {"compiles": "n/a"}
         _row(f"engine_cache/{tag}",
              (time.time() - t0) / max(s["steps"], 1) * 1e6,
              steps=s["steps"], avg_bsz=round(s["avg_batch"], 1),
              wall_s=round(s["wall_s"], 1), **payload)
+    BENCH_JSON["warmup_overlap"] = {
+        "sync_wall_s": walls["ladder_auto"],
+        "aot_wall_s": walls["ladder_auto_aot"],
+        "no_ladder_wall_s": walls["ladder_off"],
+        "saved_s": round(walls["ladder_auto"] - walls["ladder_auto_aot"], 3)}
+    _bench_coordination()
+
+
+_COORD_RANK_CODE = """
+import json, sys
+from repro.launch.train import TrainJob, run_training
+rank, coord_dir, cache_dir = int(sys.argv[1]), sys.argv[2], sys.argv[3]
+job = TrainJob(arch="llama3.2-1b", schedule="stagewise",
+               stages=((0.5, 4), (0.5, 8)), steps=12, total_samples=48,
+               seq_len=16, base_global_batch=4, max_global_batch=8,
+               base_micro_batch=2, max_micro_batch=2, base_accum=2,
+               step_impl="accum_norm", eval_every=0, aot_warmup=True,
+               coord="file", coord_dir=coord_dir, coord_rank=rank,
+               coord_world=2, coord_timeout=120.0, compile_cache=cache_dir)
+h = run_training(job)
+print("ENG", json.dumps(h["engine"]))
+"""
+
+
+def _bench_coordination():
+    """Two file-coordinated processes over a stagewise 4→8 increase: the
+    multi-host half of the engine story.  Reports per-rank barrier crossings
+    and wait time (the coordination overhead a fleet pays per rung
+    transition) plus warmups/hit-rate proving the post-increase step was a
+    cache hit on both hosts."""
+    import subprocess
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        coord, cache = os.path.join(tmp, "coord"), os.path.join(tmp, "cc")
+        procs = [subprocess.Popen(
+            [sys.executable, "-c", _COORD_RANK_CODE, str(r), coord, cache],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env) for r in range(2)]
+        out = {}
+        try:
+            for r, p in enumerate(procs):
+                stdout, stderr = p.communicate(timeout=600)
+                if p.returncode != 0:
+                    _row("engine_coord/FAILED", 0,
+                         err=stderr[-200:].replace("\n", " "))
+                    return
+                eng = json.loads(next(l for l in stdout.splitlines()
+                                      if l.startswith("ENG")).split(" ", 1)[1])
+                out[f"rank{r}"] = {k: eng[k] for k in
+                                   ("barriers", "barrier_wait_s", "desyncs",
+                                    "warmups", "compiles", "hits", "hit_rate",
+                                    "disk_cache_hits")}
+                _row(f"engine_coord/rank{r}", eng["barrier_wait_s"] * 1e6,
+                     barriers=eng["barriers"], warmups=eng["warmups"],
+                     hit_rate=eng["hit_rate"], desyncs=eng["desyncs"])
+        finally:
+            # a failed (or timed-out) rank must not leave its peer orphaned
+            # inside the tmp dir the with-block is about to delete
+            for p in procs:
+                if p.poll() is None:
+                    p.kill()
+                    p.communicate()
+        BENCH_JSON["coordination"] = out
 
 
 # ----------------------------------------------------- system benches ----
@@ -568,19 +640,34 @@ BENCHES = {
 
 def main(argv=None) -> None:
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default=None)
+    p.add_argument("--only", default=None,
+                   help="comma-separated bench names (default: all)")
     p.add_argument("--steps", type=int, default=40)
     p.add_argument("--json-out", default="BENCH_step.json",
-                   help="where the per-step perf trajectory JSON lands")
+                   help="where the per-step perf trajectory JSON lands; "
+                        "existing top-level keys from other benches are "
+                        "preserved (merge-update, so --only runs don't "
+                        "clobber the rest of the trajectory)")
     args = p.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    if only and (unknown := only - set(BENCHES)):
+        p.error(f"unknown bench(es): {sorted(unknown)}")
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
-        if args.only and args.only != name:
+        if only and name not in only:
             continue
         fn(args.steps)
     if BENCH_JSON and args.json_out:
+        merged = {}
+        if os.path.exists(args.json_out):
+            try:
+                with open(args.json_out) as f:
+                    merged = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                merged = {}
+        merged.update(BENCH_JSON)
         with open(args.json_out, "w") as f:
-            json.dump(BENCH_JSON, f, indent=2, sort_keys=True)
+            json.dump(merged, f, indent=2, sort_keys=True)
             f.write("\n")
 
 

@@ -86,4 +86,25 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
                       auto=auto)
 
 
-__all__ = ["AxisType", "make_mesh", "set_mesh", "shard_map"]
+def process_index() -> int:
+    """This host's process index in a `jax.distributed` run (0 single-host)."""
+    return jax.process_index()
+
+
+def process_count() -> int:
+    """Number of JAX processes in the job (1 single-host)."""
+    return jax.process_count()
+
+
+def sync_global_devices(name: str) -> None:
+    """Fleet-wide barrier over all hosts' devices.
+
+    `multihost_utils` has lived at this path throughout 0.4.x–0.5.x, but
+    every coordination call site routes through here so a future move (the
+    module is experimental) touches one line, like the other shims above."""
+    from jax.experimental import multihost_utils
+    multihost_utils.sync_global_devices(name)
+
+
+__all__ = ["AxisType", "make_mesh", "set_mesh", "shard_map",
+           "process_index", "process_count", "sync_global_devices"]

@@ -1,0 +1,373 @@
+"""Multi-host warmup coordination + persistent compile cache (DESIGN §8.1).
+
+The bucketed engine makes a batch increase a cache hit on ONE host; on a
+multi-host mesh that is not enough — the paper's efficiency case collapses
+unless the rung transition is a cache hit on EVERY host, at the SAME step.
+Three failure modes motivate this module:
+
+* hosts entering a new rung's executable at different times stall the whole
+  fleet on the slowest compile (collectives block until everyone arrives);
+* each host *guessing* its own warmup target can diverge (e.g. after a
+  restart, or any nondeterminism on the controller inputs) — then some hosts
+  warm the wrong rung and pay a foreground compile at the transition;
+* one host's background warmup failing while the others succeed leaves the
+  fleet split between an AOT executable and a synchronous build.
+
+`Coordinator` is the small protocol the engine consumes:
+
+* ``barrier(name)``      — rung-entry barrier: returns the seconds THIS host
+                           waited for the fleet (``EngineStats.barrier_wait_s``).
+* ``agree(topic, p)``    — warmup agreement: every host proposes its next
+                           rung; the leader's (rank 0) proposal wins and is
+                           returned to everyone.  A host whose local proposal
+                           differs counts a desync and warms the agreed rung.
+* ``broadcast_failure``  / ``poll_failures`` — one host's warmup failure
+                           downgrades ALL hosts to the synchronous-build
+                           fallback coherently (nobody keeps waiting on a
+                           warmup that will never land elsewhere).
+
+Implementations:
+
+* `NoOpCoordinator`      — single host; every operation is free.
+* `FileCoordinator`      — a shared directory (NFS on real clusters, tmpdir
+                           under ``--xla_force_host_platform_device_count``
+                           subprocess tests).  Barriers are rank files in a
+                           per-(name, generation) directory; agreement is an
+                           atomic write-once file from the leader; failures
+                           are marker files.  Restart semantics: barrier
+                           files persist, so a restarted worker re-running
+                           the same deterministic step sequence sails
+                           through barriers the fleet already passed and
+                           catches up to the live one.
+* `DistributedCoordinator` — `jax.distributed` runs: barriers double as the
+                           failure exchange (one `process_allgather` carries
+                           each host's failed-rung tags), agreement is
+                           `broadcast_one_to_all`.
+
+The **persistent compile cache** half (`enable_persistent_cache`) wires
+`jax.config`'s compilation-cache directory for the job, keyed by JAX
+version + backend so restarted or late-joining workers reuse the fleet's
+executables while incompatible toolchains never collide on an entry.  A
+process-wide monitoring listener counts disk-cache hits
+(`/jax/compilation_cache/cache_hits`) so `EngineStats` can distinguish a
+compile served from disk from a fresh XLA build.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+import zlib
+
+import numpy as np
+
+
+# ------------------------------------------------------------ protocol ----
+
+class Coordinator:
+    """What the bucketed engine needs from a multi-host rendezvous layer."""
+
+    rank: int = 0
+    world: int = 1
+
+    def barrier(self, name: str, timeout: float | None = None) -> float:
+        """Block until all `world` hosts reach `name`; return seconds waited."""
+        raise NotImplementedError
+
+    def agree(self, topic: str, payload: str) -> str:
+        """Return the leader's `payload` for `topic` on every host."""
+        raise NotImplementedError
+
+    def broadcast_failure(self, tag: str) -> None:
+        """Mark `tag` (a rung key digest) as failed fleet-wide."""
+        raise NotImplementedError
+
+    def poll_failures(self) -> frozenset:
+        """Tags any host has marked failed (non-blocking; may lag until the
+        next synchronization point on collective-backed impls)."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class NoOpCoordinator(Coordinator):
+    """Single-host: barriers are free, agreement echoes the proposal."""
+
+    def barrier(self, name, timeout=None):
+        return 0.0
+
+    def agree(self, topic, payload):
+        return payload
+
+    def broadcast_failure(self, tag):
+        pass
+
+    def poll_failures(self):
+        return frozenset()
+
+
+# ------------------------------------------------------ file coordinator ----
+
+def _fs_safe(name: str) -> str:
+    """Filesystem-safe, collision-free token for an arbitrary name."""
+    stem = re.sub(r"[^A-Za-z0-9_.x-]", "_", name)[:48]
+    return f"{stem}-{zlib.crc32(name.encode()) & 0xFFFFFFFF:08x}"
+
+
+class FileCoordinator(Coordinator):
+    """Shared-directory rendezvous for multi-process (one JAX process per
+    host) runs: subprocess tests under `--xla_force_host_platform_device_count`
+    and real fleets with a shared filesystem.
+
+    Every operation is lock-free on the consumer side: writers create files
+    atomically (`os.replace` from a rank-private temp), readers poll.  The
+    directory is append-only during a run — barrier generations, agreement
+    topics and failure markers all get fresh paths — so a slow host can
+    never miss an event that faster hosts already consumed.
+
+    `run_id` namespaces the directory per job (`root/<run_id>/...`): a
+    DIFFERENT job pointed at a reused coordination dir lands in its own
+    namespace instead of silently sailing through the previous run's
+    barrier files and replaying its write-once agreement decisions.
+    Within one run_id, persistence is the restart contract: a restarted
+    worker re-running the same deterministic step sequence skips barriers
+    the fleet already passed and catches up to the live one.  Re-running
+    an IDENTICAL job from scratch should use a fresh root.
+    """
+
+    def __init__(self, root: str, rank: int, world: int, *,
+                 timeout: float = 120.0, poll_s: float = 0.005,
+                 run_id: str = ""):
+        if world < 1 or not (0 <= rank < world):
+            raise ValueError(f"bad coordinator geometry rank={rank} world={world}")
+        self.root = os.path.abspath(
+            os.path.join(root, _fs_safe(run_id)) if run_id else root)
+        self.rank, self.world = rank, world
+        self.timeout, self.poll_s = timeout, poll_s
+        self._gens: dict[str, int] = {}     # per-name barrier generation
+        os.makedirs(self.root, exist_ok=True)
+
+    def _atomic_write(self, path: str, content: str) -> None:
+        tmp = f"{path}.tmp{self.rank}"
+        with open(tmp, "w") as f:
+            f.write(content)
+        os.replace(tmp, path)
+
+    def barrier(self, name, timeout=None):
+        timeout = self.timeout if timeout is None else timeout
+        gen = self._gens[name] = self._gens.get(name, 0) + 1
+        d = os.path.join(self.root, "barrier", f"{_fs_safe(name)}.{gen}")
+        os.makedirs(d, exist_ok=True)
+        self._atomic_write(os.path.join(d, str(self.rank)), "")
+        t0 = time.monotonic()
+        while True:
+            arrived = len(os.listdir(d))
+            if arrived >= self.world:
+                return time.monotonic() - t0
+            if time.monotonic() - t0 > timeout:
+                raise TimeoutError(
+                    f"coordination barrier {name!r} (generation {gen}): "
+                    f"{arrived}/{self.world} hosts arrived within {timeout:.1f}s "
+                    f"— a host died or desynchronized; coordination dir: "
+                    f"{self.root}")
+            time.sleep(self.poll_s)
+
+    def agree(self, topic, payload):
+        d = os.path.join(self.root, "agree")
+        os.makedirs(d, exist_ok=True)
+        path = os.path.join(d, _fs_safe(topic))
+        if self.rank == 0:
+            # write-once: a restarted leader must republish the SAME value
+            # (the topic stream is deterministic), never clobber a decision
+            # followers may have consumed
+            if not os.path.exists(path):
+                self._atomic_write(path, payload)
+            with open(path) as f:
+                return f.read()
+        t0 = time.monotonic()
+        while not os.path.exists(path):
+            if time.monotonic() - t0 > self.timeout:
+                raise TimeoutError(
+                    f"warmup agreement {topic!r}: leader published nothing "
+                    f"within {self.timeout:.1f}s (coordination dir: {self.root})")
+            time.sleep(self.poll_s)
+        with open(path) as f:
+            return f.read()
+
+    def broadcast_failure(self, tag):
+        d = os.path.join(self.root, "fail")
+        os.makedirs(d, exist_ok=True)
+        self._atomic_write(os.path.join(d, _fs_safe(tag)), tag)
+
+    def poll_failures(self):
+        d = os.path.join(self.root, "fail")
+        if not os.path.isdir(d):
+            return frozenset()
+        tags = set()
+        for entry in os.listdir(d):
+            if entry.endswith(f".tmp{self.rank}"):
+                continue
+            try:
+                with open(os.path.join(d, entry)) as f:
+                    tags.add(f.read())
+            except OSError:      # another rank's temp file vanished mid-list
+                continue
+        return frozenset(tags)
+
+
+# ----------------------------------------------- jax.distributed backend ----
+
+_PAYLOAD_BYTES = 1024
+
+
+def _pack_str(s: str, n: int = _PAYLOAD_BYTES) -> np.ndarray:
+    b = s.encode()
+    if len(b) > n:
+        raise ValueError(f"coordination payload too large ({len(b)} > {n})")
+    arr = np.zeros(n, np.uint8)
+    arr[: len(b)] = np.frombuffer(b, np.uint8)
+    return arr
+
+
+def _unpack_str(arr) -> str:
+    return bytes(np.asarray(arr, np.uint8)).rstrip(b"\0").decode()
+
+
+class DistributedCoordinator(Coordinator):
+    """`jax.distributed`-backed coordination: barriers are a
+    `process_allgather` that doubles as the failure exchange (each host
+    contributes its locally-failed rung tags, so by the time anyone crosses
+    a rung-entry barrier the whole fleet shares one failure view), and
+    agreement is `broadcast_one_to_all` from process 0.
+
+    `poll_failures` is non-blocking by design: it returns the view as of the
+    last barrier plus this host's own failures — exactly the point where the
+    engine consumes it (failures are checked AT rung entry, right next to
+    the barrier that refreshes them).
+
+    Timeouts: unlike the file coordinator, the collectives here cannot take
+    a per-call deadline — a dead host surfaces through the `jax.distributed`
+    runtime's own collective/heartbeat timeouts (configured at
+    `jax.distributed.initialize`), not through `--coord-timeout`, which this
+    backend ignores."""
+
+    def __init__(self, timeout: float = 120.0):
+        from repro.compat import process_count, process_index
+        self.rank = process_index()
+        self.world = process_count()
+        del timeout   # accepted for factory symmetry; see class docstring
+        self._local: set[str] = set()
+        self._known: set[str] = set()
+
+    def barrier(self, name, timeout=None):
+        from jax.experimental import multihost_utils
+        t0 = time.monotonic()
+        rows = multihost_utils.process_allgather(
+            _pack_str(json.dumps(sorted(self._local))))
+        for row in np.atleast_2d(rows):
+            self._known.update(json.loads(_unpack_str(row) or "[]"))
+        return time.monotonic() - t0
+
+    def agree(self, topic, payload):
+        from jax.experimental import multihost_utils
+        out = multihost_utils.broadcast_one_to_all(_pack_str(payload))
+        return _unpack_str(out)
+
+    def broadcast_failure(self, tag):
+        self._local.add(tag)
+
+    def poll_failures(self):
+        return frozenset(self._known | self._local)
+
+
+# -------------------------------------------------------------- factory ----
+
+def make_coordinator(kind: str, *, root: str = "", rank: int = -1,
+                     world: int = 0, timeout: float = 120.0,
+                     run_id: str = ""):
+    """Resolve `--coord={none,file,distributed}` into a Coordinator (or None
+    for `none` — the engine's coordination hooks vanish entirely, bit-
+    identical to the uncoordinated single-host engine).
+
+    `file` geometry resolves from explicit args first, then the
+    `REPRO_COORD_RANK` / `REPRO_COORD_WORLD` environment (how the subprocess
+    tests and the CI smoke launch per-host processes); `run_id` namespaces
+    the shared directory per job (see FileCoordinator)."""
+    if kind in ("none", "", None):
+        return None
+    if kind == "file":
+        if not root:
+            raise ValueError("--coord=file needs --coord-dir (a directory "
+                             "shared by every host)")
+        rank = rank if rank >= 0 else int(os.environ.get("REPRO_COORD_RANK", "0"))
+        world = world or int(os.environ.get("REPRO_COORD_WORLD", "1"))
+        return FileCoordinator(root, rank, world, timeout=timeout,
+                               run_id=run_id)
+    if kind == "distributed":
+        return DistributedCoordinator(timeout=timeout)
+    raise ValueError(f"unknown coordinator kind {kind!r} "
+                     "(expected none|file|distributed)")
+
+
+# ------------------------------------------- persistent compile cache ----
+
+_disk_hits = 0
+_listener_lock = threading.Lock()
+_listener_installed = False
+
+
+def _install_hit_listener() -> None:
+    global _listener_installed
+    with _listener_lock:
+        if _listener_installed:
+            return
+        import jax
+
+        def _on_event(name: str, **kw) -> None:
+            global _disk_hits
+            if name == "/jax/compilation_cache/cache_hits":
+                with _listener_lock:
+                    _disk_hits += 1
+
+        jax.monitoring.register_event_listener(_on_event)
+        _listener_installed = True
+
+
+def disk_cache_hits() -> int:
+    """Process-wide count of compiles served from the persistent disk cache
+    (0 until `enable_persistent_cache` installs the monitoring listener)."""
+    with _listener_lock:
+        return _disk_hits
+
+
+def enable_persistent_cache(cache_dir: str) -> str:
+    """Point JAX's persistent compilation cache at `cache_dir` for this job.
+
+    The actual directory is keyed by JAX version and backend platform —
+    restarted or late-joining workers of the same job resolve to the SAME
+    key and deserialize the fleet's executables instead of recompiling,
+    while a toolchain bump or a CPU-smoke run never poisons the TPU fleet's
+    entries (XLA additionally content-hashes every executable, so entries
+    are safe against stale HLO).  Thresholds are zeroed so even smoke-scale
+    steps persist — the multi-host tests restart an engine and assert a
+    disk hit.  Returns the resolved directory."""
+    import jax
+    path = os.path.join(cache_dir,
+                        f"jax{jax.__version__}-{jax.default_backend()}")
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    _install_hit_listener()
+    return path
+
+
+__all__ = [
+    "Coordinator", "NoOpCoordinator", "FileCoordinator",
+    "DistributedCoordinator", "make_coordinator",
+    "enable_persistent_cache", "disk_cache_hits",
+]

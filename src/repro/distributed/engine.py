@@ -18,17 +18,25 @@ accounting, and cache-key scheme: DESIGN.md §8 "Bucketed step compilation"):
   extra-input) signature for the whole run;
 * optional **ahead-of-time warmup** of the next-larger rung in a background
   thread, overlapped with training (XLA compilation releases the GIL), so
-  the first step after an increase doesn't pay the compile either.
+  the first step after an increase doesn't pay the compile either;
+* optional **multi-host coordination** (DESIGN §8.1, `coordination.py`):
+  rung-entry barriers so every host enters a new rung's executable together,
+  leader-decided warmup agreement instead of per-host guessing, and a
+  failure broadcast that downgrades the whole fleet to the synchronous-build
+  fallback coherently when any host's warmup dies — plus the persistent
+  compile cache so restarted / late-joining workers deserialize executables
+  from disk instead of recompiling.
 
-`EngineStats` (compile count, cache hits, padding-waste fraction) threads
-through `launch/train.py` history into `benchmarks/run.py` rows so the
-recompile savings stay measurable.
+`EngineStats` (compile count, cache hits, padding-waste fraction, barrier
+waits, desyncs, disk-cache hits) threads through `launch/train.py` history
+into `benchmarks/run.py` rows so the recompile savings stay measurable.
 """
 
 from __future__ import annotations
 
 import contextlib
 import threading
+import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 
@@ -37,6 +45,7 @@ import jax.numpy as jnp
 
 from repro.compat import set_mesh
 from repro.core.schedule import BatchPlan, quantize_to_ladder
+from repro.distributed.coordination import disk_cache_hits, enable_persistent_cache
 
 
 @dataclass
@@ -54,6 +63,16 @@ class EngineStats:
     real_samples: int = 0
     padded_samples: int = 0
     buckets_used: list = field(default_factory=list)
+    # multi-host coordination (DESIGN §8.1; all zero without a coordinator)
+    barriers: int = 0          # rung-entry barriers crossed
+    barrier_wait_s: float = 0.0   # seconds THIS host waited for the fleet
+    desyncs: int = 0           # local warmup proposal != fleet agreement
+    coord_downgrades: int = 0  # queued warmups dropped on a remote failure
+    # compiles served from the persistent disk cache — PROCESS-wide since
+    # engine construction (the monitoring counter cannot attribute a hit to
+    # a jit): sibling jits like train.py's eval fn count too, so read this
+    # as "executables this job reused from disk", not an engine-only figure
+    disk_cache_hits: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -74,6 +93,11 @@ class EngineStats:
             "hit_rate": round(self.hit_rate, 4),
             "padding_waste": round(self.padding_waste, 4),
             "buckets_used": list(self.buckets_used),
+            "barriers": self.barriers,
+            "barrier_wait_s": round(self.barrier_wait_s, 4),
+            "desyncs": self.desyncs,
+            "coord_downgrades": self.coord_downgrades,
+            "disk_cache_hits": self.disk_cache_hits,
         }
 
 
@@ -89,6 +113,17 @@ def _sds(batch):
     return {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
 
 
+def _key_tag(key: tuple) -> str:
+    """Short, deterministic, filesystem-safe digest of a cache key — the
+    vocabulary the coordinator speaks (barrier names, failure tags)."""
+    return f"{zlib.crc32(repr(key).encode()) & 0xFFFFFFFF:08x}"
+
+
+def _plan_tag(plan: BatchPlan | None) -> str:
+    """Warmup-agreement payload: a rung identity, or 'none' at the ladder top."""
+    return "none" if plan is None else f"{plan.micro_batch}x{plan.accum_steps}"
+
+
 class BucketedEngine:
     """Keyed cache of compiled train steps over a bucket ladder.
 
@@ -99,10 +134,18 @@ class BucketedEngine:
                   re-enter it; mesh contexts are thread-local).
     params_like / opt_like : abstract step operands, only needed for
                   `aot_warmup` (lower+compile needs the full signature).
+    coordinator : a `coordination.Coordinator` for multi-host runs (None =
+                  uncoordinated, bit-identical to the single-host engine):
+                  rung-entry barriers, warmup agreement, failure broadcast.
+    persistent_cache_dir : when set, wires JAX's persistent compilation
+                  cache (keyed per job/toolchain) so restarted or
+                  late-joining workers deserialize executables from disk;
+                  `stats.disk_cache_hits` counts the reuses.
     """
 
     def __init__(self, wrap, ladder: tuple[BatchPlan, ...], *, mesh=None,
-                 params_like=None, opt_like=None, aot_warmup: bool = False):
+                 params_like=None, opt_like=None, aot_warmup: bool = False,
+                 coordinator=None, persistent_cache_dir: str | None = None):
         if not ladder:
             raise ValueError("bucket ladder must have at least one rung")
         self._wrap = wrap
@@ -121,6 +164,17 @@ class BucketedEngine:
         self._pending: dict[tuple, object] = {}   # key -> warmup Future
         self._building: dict[tuple, Future] = {}  # key -> foreground build
         self._warmup_errors: list[Exception] = []
+        self._coord = coordinator
+        self._entered_key = None      # last rung key this host stepped in
+        self._agree_seq = 0           # monotone warmup-agreement topic id
+        self._agreed_for = None       # bucket tag the last agreement covered
+        self._agreed_target = None    # ...and the rung the fleet settled on
+        if persistent_cache_dir:
+            enable_persistent_cache(persistent_cache_dir)
+        # disk hits are a process-wide monitoring counter; this engine
+        # reports the delta since its construction (an engine restart with a
+        # warm cache directory therefore starts back at 0 and counts reuses)
+        self._disk_base = disk_cache_hits()
         self.stats = EngineStats()
 
     # ------------------------------------------------------ quantization --
@@ -167,15 +221,25 @@ class BucketedEngine:
         `stats.compiles`).  The blocking waits — a pending warmup's
         `result()` and the actual trace — happen OUTSIDE the lock;
         concurrent foreground callers rendezvous on a per-key `Future` in
-        `_building`, so exactly one traces and the rest wait for it."""
+        `_building`, so exactly one traces and the rest wait for it.
+
+        With a coordinator, stepping into a DIFFERENT signature than the
+        last step is a rung transition: remote warmup failures are polled
+        (a rung any host flagged gets its queued-not-started warmup dropped
+        — the coherent downgrade to the synchronous path) and the rung-entry
+        barrier holds this host until the whole fleet is ready to enter the
+        new executable together."""
         key = _batch_key(batch)
+        if self._coord is not None and key != self._entered_key:
+            self._enter_rung(key)
+            self._entered_key = key
         with self._lock:
             fut = self._pending.pop(key, None)
         if fut is not None:
             try:
                 fn = fut.result()  # warmup finished or finishes now
             except Exception as e:               # noqa: BLE001 — surfaced in drain()
-                self._record_warmup_failure(e)
+                self._record_warmup_failure(e, key)
             else:
                 with self._lock:
                     self._cache.setdefault(key, fn)
@@ -215,10 +279,34 @@ class BucketedEngine:
             except Exception:                  # noqa: BLE001 — builder raised
                 pass
 
-    def _record_warmup_failure(self, exc: Exception):
+    def _enter_rung(self, key: tuple):
+        """Multi-host rung transition (DESIGN §8.1): coherent-downgrade check
+        + entry barrier.  Called once per change of step signature."""
+        tag = _key_tag(key)
+        if tag in self._coord.poll_failures():
+            # some host's warmup of THIS rung died: nobody may depend on a
+            # background compile landing.  A queued-not-started warmup is
+            # cancelled (foreground build instead); one already running is
+            # left in place — blocking on an in-flight compile IS the
+            # synchronous fallback, and cancelling it could not stop it.
+            with self._lock:
+                fut = self._pending.get(key)
+                if fut is not None and fut.cancel():
+                    self._pending.pop(key, None)
+                    self.stats.coord_downgrades += 1
+        wait = self._coord.barrier(f"rung-{tag}")
+        with self._lock:
+            self.stats.barriers += 1
+            self.stats.barrier_wait_s += wait
+
+    def _record_warmup_failure(self, exc: Exception, key: tuple | None = None):
         with self._lock:
             self.stats.warmup_failures += 1
             self._warmup_errors.append(exc)
+        if self._coord is not None and key is not None:
+            # fleet-wide coherence: every other host downgrades this rung to
+            # the synchronous-build fallback instead of waiting on a warmup
+            self._coord.broadcast_failure(_key_tag(key))
 
     def observe(self, plan: BatchPlan, bucket: BatchPlan):
         """Record one executed step's padding accounting."""
@@ -228,6 +316,17 @@ class BucketedEngine:
         tag = f"{bucket.micro_batch}x{bucket.accum_steps}"
         if tag not in self.stats.buckets_used:
             self.stats.buckets_used.append(tag)
+        self._refresh_disk_hits()
+
+    def _refresh_disk_hits(self):
+        """Fold the process-wide persistent-cache hit counter into stats.
+
+        Foreground compiles are lazy (XLA builds at the step's first CALL,
+        after `get_step` returned), so the delta is refreshed at the two
+        points that straddle them: each `observe` and `drain`."""
+        hits = disk_cache_hits() - self._disk_base
+        if hits > self.stats.disk_cache_hits:
+            self.stats.disk_cache_hits = hits
 
     # ------------------------------------------------------- AOT warmup --
 
@@ -251,14 +350,66 @@ class BucketedEngine:
             if key in self._cache or key in self._pending:
                 return
             self._pending[key] = self._pool.submit(
-                self._compile_aot, batch_like)
+                self._compile_aot, batch_like, key)
 
-    def _compile_aot(self, batch_like):
-        fn = self._build(batch_like)
-        with self._mesh_ctx():
-            compiled = fn.lower(
-                self._params_like, self._opt_like, batch_like,
-                jax.ShapeDtypeStruct((), jnp.float32)).compile()
+    def warmup_agreed(self, bucket: BatchPlan, batch_example: dict):
+        """Coordinated AOT warmup: the fleet agrees on ONE next rung to
+        background-compile instead of each host guessing (DESIGN §8.1).
+
+        Every host proposes its local `next_bucket(bucket)`; the leader's
+        proposal wins.  A host whose proposal differs (controller state
+        drifted, restart mid-ladder) counts a `desync` and warms the agreed
+        rung anyway, so the eventual rung transition is a cache hit
+        everywhere.  Returns the rung actually queued (None at the ladder
+        top).
+
+        One agreement per BUCKET CHANGE, not per step: the proposal is a
+        pure function of the current bucket, so re-agreeing every step
+        would only add a per-step fleet rendezvous (and, on the file
+        coordinator, a file per step) to the hot loop for an answer that
+        cannot change.  Topic ids are a per-engine monotone counter and the
+        bucket sequence is deterministic, so hosts consume the same topic
+        stream.
+
+        Uncoordinated (or world-of-one) engines skip the agreement and
+        behave exactly like `warmup(next_bucket(bucket), ...)`."""
+        proposal = self.next_bucket(bucket)
+        if (not self._aot or self._coord is None
+                or getattr(self._coord, "world", 1) == 1):
+            self.warmup(proposal, batch_example)
+            return proposal
+        cur = _plan_tag(bucket)
+        if cur != self._agreed_for:
+            self._agree_seq += 1
+            prop_tag = _plan_tag(proposal)
+            agreed = self._coord.agree(f"warmup-{self._agree_seq}", prop_tag)
+            target = proposal
+            if agreed != prop_tag:
+                with self._lock:
+                    self.stats.desyncs += 1
+                target = next(
+                    (p for p in self.ladder if _plan_tag(p) == agreed), None)
+            self._agreed_for, self._agreed_target = cur, target
+        if self._agreed_target is not None:
+            self.warmup(self._agreed_target, batch_example)
+        return self._agreed_target
+
+    def _compile_aot(self, batch_like, key):
+        try:
+            fn = self._build(batch_like)
+            with self._mesh_ctx():
+                compiled = fn.lower(
+                    self._params_like, self._opt_like, batch_like,
+                    jax.ShapeDtypeStruct((), jnp.float32)).compile()
+        except BaseException:
+            # broadcast IMMEDIATELY (not when this host eventually consumes
+            # the failed future): hosts polling at rung entry downgrade to
+            # the synchronous build instead of counting on a warmup that
+            # already died.  Local stats stay consumption-time — exactly
+            # once, in get_step/drain — and the broadcast is idempotent.
+            if self._coord is not None:
+                self._coord.broadcast_failure(_key_tag(key))
+            raise
         with self._lock:     # success: count the finished warmup
             self.stats.warmups += 1
             self.stats.compiles += 1
@@ -272,19 +423,28 @@ class BucketedEngine:
         with the failure count) instead of being swallowed into cache
         entries.  Pass raise_errors=False to only record them in
         `stats.warmup_failures` (the training loop does this: a failed
-        warmup already fell back to a synchronous compile)."""
-        with self._lock:
-            pending = list(self._pending.items())
-        for key, fut in pending:
+        warmup already fell back to a synchronous compile).
+
+        Accounting is per-future exactly-once: a future is CLAIMED by
+        atomically popping its key from `_pending` under the lock, and only
+        the claimant records its outcome.  (`drain` used to iterate a stale
+        snapshot of `_pending` while `get_step` popped and recorded the same
+        future's failure — the one exception inflated `warmup_failures` to 2
+        and a handled error was re-raised.)"""
+        while True:
+            with self._lock:
+                if not self._pending:
+                    break
+                key = next(iter(self._pending))
+                fut = self._pending.pop(key)
             try:
                 fn = fut.result()
             except Exception as e:               # noqa: BLE001
-                self._record_warmup_failure(e)
+                self._record_warmup_failure(e, key)
             else:
                 with self._lock:   # cache writes stay under the lock
                     self._cache.setdefault(key, fn)
-            with self._lock:
-                self._pending.pop(key, None)
+        self._refresh_disk_hits()
         with self._lock:
             errors, count = list(self._warmup_errors), self.stats.warmup_failures
             self._warmup_errors = []

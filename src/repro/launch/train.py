@@ -22,6 +22,7 @@ import json
 import math
 import os
 import time
+import zlib
 from dataclasses import dataclass, field
 
 import jax
@@ -36,6 +37,7 @@ from repro.core.schedule import (
     parse_ladder, round_plan)
 from repro.data.pipeline import (
     MarkovTokens, UniformTokens, make_batch, pad_to_bucket)
+from repro.distributed.coordination import enable_persistent_cache, make_coordinator
 from repro.distributed.engine import BucketedEngine
 from repro.distributed.train_step import make_fsdp_norm_step, make_accum_norm_step
 from repro.compat import set_mesh
@@ -86,6 +88,20 @@ class TrainJob:
     # (the pre-engine behavior); or an explicit 'micro:accum,micro:accum,...'
     bucket_ladder: str = "auto"
     aot_warmup: bool = False              # compile the next rung in background
+    # multi-host warmup coordination (DESIGN §8.1): 'none' = uncoordinated
+    # single-host engine (bit-identical to no coordination); 'file' = shared
+    # directory (subprocess tests, NFS fleets); 'distributed' = jax.distributed
+    coord: str = "none"                   # none | file | distributed
+    coord_dir: str = ""                   # shared dir for --coord=file
+    coord_rank: int = -1                  # -1: resolve from REPRO_COORD_RANK
+    coord_world: int = 0                  # 0: resolve from REPRO_COORD_WORLD
+    coord_timeout: float = 120.0          # barrier/agreement timeout seconds
+                                          # (file coord; 'distributed' uses
+                                          # the jax.distributed runtime's own
+                                          # collective timeouts)
+    # persistent XLA compile cache dir (keyed per jax version + backend):
+    # restarted / late-joining workers deserialize executables from disk
+    compile_cache: str = ""
     eval_every: int = 25
     eval_batches: int = 4
     checkpoint_dir: str = ""
@@ -103,6 +119,21 @@ def _sds(batch):
 
 
 def run_training(job: TrainJob) -> dict:
+    if job.compile_cache:
+        # before any compile: every executable this job builds lands in (or
+        # comes from) the per-job persistent cache
+        enable_persistent_cache(job.compile_cache)
+    # run identity for the file coordinator: a digest of the job config
+    # minus per-host fields, so every rank of THIS job (including restarts)
+    # shares one coordination namespace while a different job pointed at a
+    # reused --coord-dir can never replay this run's barrier/agreement state
+    per_host = {"coord_rank", "log_path", "checkpoint_dir"}
+    run_id = "job-%08x" % zlib.crc32(repr(sorted(
+        (k, v) for k, v in dataclasses.asdict(job).items()
+        if k not in per_host)).encode())
+    coordinator = make_coordinator(job.coord, root=job.coord_dir,
+                                   rank=job.coord_rank, world=job.coord_world,
+                                   timeout=job.coord_timeout, run_id=run_id)
     cfg = get_smoke_config(job.arch) if job.smoke else get_config(job.arch)
     model = build_model(cfg)
     key = jax.random.PRNGKey(job.seed)
@@ -198,7 +229,8 @@ def run_training(job: TrainJob) -> dict:
         engine = BucketedEngine(wrap, ladder, mesh=mesh,
                                 params_like=_sds(params),
                                 opt_like=_sds(opt_state),
-                                aot_warmup=job.aot_warmup)
+                                aot_warmup=job.aot_warmup,
+                                coordinator=coordinator)
 
     def get_step(plan: BatchPlan, batch):
         # legacy path (bucket_ladder='off'): one compile per (M, micro, seq)
@@ -265,7 +297,9 @@ def run_training(job: TrainJob) -> dict:
                 batch_np = pad_to_bucket(batch_np, plan, bucket)
                 step_fn = engine.get_step(batch_np)
                 engine.observe(plan, bucket)
-                engine.warmup(engine.next_bucket(bucket), batch_np)
+                # coordinated: the fleet agrees on ONE rung to warm (each
+                # host's guess could drift); uncoordinated: next_bucket
+                engine.warmup_agreed(bucket, batch_np)
             batch = jax.tree.map(jnp.asarray, batch_np)
             lr = warmup_cosine(samples, peak_lr=job.peak_lr, min_lr=job.min_lr,
                                warmup_steps=warmup_samples,
@@ -327,6 +361,8 @@ def run_training(job: TrainJob) -> dict:
         # surface as stats.warmup_failures rather than aborting the run
         engine.drain(raise_errors=False)
         history["engine"] = engine.stats.as_dict()
+    if coordinator is not None:
+        coordinator.close()
     # callers (benchmarks, examples) consume the pytree view
     history["final_params"] = (layout.unflatten(list(params))
                                if job.params_impl == "flat" else params)
@@ -346,7 +382,8 @@ def summarize(history: dict) -> dict:
     eng = history.get("engine")
     if eng:
         out["engine"] = {k: eng[k] for k in
-                         ("compiles", "hit_rate", "padding_waste", "warmups")}
+                         ("compiles", "hit_rate", "padding_waste", "warmups",
+                          "barrier_wait_s", "desyncs", "disk_cache_hits")}
     return out
 
 

@@ -9,14 +9,19 @@ SRC = os.path.join(REPO, "src")
 sys.path.insert(0, SRC)
 
 
-def run_subprocess(code: str, devices: int = 1, timeout: int = 560) -> str:
+def run_subprocess(code: str, devices: int = 1, timeout: int = 560,
+                   env_extra: dict | None = None) -> str:
     """Run a python snippet in a fresh process with a forced device count
     (keeps the main pytest process at 1 device, per the dry-run isolation
-    rule)."""
+    rule).  `env_extra` overlays the environment — e.g. PYTHONHASHSEED for
+    the hash-randomization determinism tests, REPRO_COORD_* for
+    coordination geometry."""
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     if devices > 1:
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    if env_extra:
+        env.update(env_extra)
     res = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, env=env, timeout=timeout)
     if res.returncode != 0:

@@ -49,6 +49,53 @@ def test_microbatch_iterator():
     assert micros[0]["tokens"].shape == (4, 4)
 
 
+def test_extra_inputs_independent_of_hash_randomization(subproc):
+    """Bugfix regression: `make_batch` seeded extra frontend inputs with
+    `hash(name)`, which PYTHONHASHSEED randomizes PER PROCESS — different
+    hosts materialized different vision/audio batches, silently violating
+    the "pure function of (seed, step, plan)" multi-host contract.  Two
+    processes with different hash seeds must produce identical batches."""
+    code = """
+import zlib
+import numpy as np
+from repro.core.schedule import BatchPlan
+from repro.data.pipeline import UniformTokens, make_batch
+src = UniformTokens(vocab_size=32, seed=0)
+plan = BatchPlan(global_batch=4, micro_batch=2, accum_steps=2, workers=1)
+b = make_batch(src, 3, plan, 8,
+               {"patch_embeds": (4, 8), "frames": (2, 8)})
+digest = zlib.crc32(b"".join(np.ascontiguousarray(v).tobytes()
+                             for _, v in sorted(b.items())))
+print("DIGEST", digest)
+"""
+    outs = {subproc(code, env_extra={"PYTHONHASHSEED": hs}).strip()
+            for hs in ("0", "424242")}
+    assert len(outs) == 1, f"extra inputs depend on hash seed: {outs}"
+
+
+def test_memmap_too_short_raises_clear_error(tmp_path):
+    """Bugfix regression: a corpus shorter than seq_len + 2 used to crash
+    deep inside `rng.integers` (`high <= 0`); it must raise a clear error
+    naming the corpus, its size, and the requirement."""
+    import pytest
+
+    path = tmp_path / "short.bin"
+    np.arange(10, dtype=np.int32).tofile(path)
+    src = MemmapTokens(str(path), vocab_size=50, seed=0)
+    with pytest.raises(ValueError, match="too short.*seq_len=16"):
+        src.sequences(0, 2, seq_len=16)
+    # boundary: seq_len + 2 tokens is exactly enough (one valid start)
+    path2 = tmp_path / "exact.bin"
+    np.arange(18, dtype=np.int32).tofile(path2)
+    seqs = MemmapTokens(str(path2), vocab_size=50, seed=0).sequences(0, 2, 16)
+    assert seqs.shape == (2, 17)
+    # an empty corpus fails at construction, not first sample
+    path3 = tmp_path / "empty.bin"
+    path3.touch()
+    with pytest.raises(ValueError, match="empty"):
+        MemmapTokens(str(path3), vocab_size=50, seed=0)
+
+
 def test_memmap_source(tmp_path):
     data = np.arange(1000, dtype=np.int32) % 50
     path = tmp_path / "tokens.bin"

@@ -257,6 +257,51 @@ def test_engine_warmup_failure_counts_and_surfaces():
     assert engine2.stats.warmup_failures == 1
 
 
+def test_warmup_failure_accounted_exactly_once_under_race():
+    """Satellite bugfix: `drain` used to iterate a STALE snapshot of
+    `_pending` while `get_step` popped and recorded the same future's
+    failure — one background exception inflated `warmup_failures` to 2 and
+    re-raised a handled error.  Accounting is now claim-based (whoever pops
+    the key under the lock owns the outcome), so a drain racing a get_step
+    against one deliberately failing warmup records EXACTLY one failure."""
+    import threading
+    import time as _time
+
+    ladder = parse_ladder("2:1,2:2", workers=1)
+    release = threading.Event()
+
+    class BlockingExploder:
+        def lower(self, *a):
+            release.wait(timeout=30)
+            raise RuntimeError("boom: deferred AOT failure")
+
+    engine = BucketedEngine(lambda bl: BlockingExploder(), ladder,
+                            params_like={}, opt_like={}, aot_warmup=True)
+    src = MarkovTokens(vocab_size=32, seed=0)
+    batch = make_batch(src, 0, ladder[0], seq_len=4)
+    engine.warmup(ladder[1], batch)
+    drainer = threading.Thread(target=lambda: engine.drain(raise_errors=False))
+    drainer.start()
+    # wait until drain CLAIMED the (still-running) warmup future
+    deadline = _time.monotonic() + 10
+    while engine._pending:
+        assert _time.monotonic() < deadline, "drain never claimed the warmup"
+        _time.sleep(0.005)
+    # the racing get_step finds nothing pending -> synchronous fallback
+    # build; it must NOT account the same future a second time
+    plan2 = ladder[1]
+    batch2 = pad_to_bucket(make_batch(src, 1, plan2, seq_len=4), plan2, plan2)
+    step = engine.get_step(batch2)
+    assert isinstance(step, BlockingExploder)
+    release.set()                      # let the background failure surface
+    drainer.join(timeout=30)
+    assert not drainer.is_alive()
+    assert engine.stats.warmup_failures == 1   # was 2 with the stale copy
+    assert engine.stats.compiles == 1          # only the sync fallback
+    engine.drain(raise_errors=False)           # idempotent: nothing pending
+    assert engine.stats.warmup_failures == 1
+
+
 def test_run_training_engine_stats_end_to_end():
     """The engine threads through launch/train.py: an adaptive run reports
     compiles == buckets used, and a new seq_len bucket is a new compile."""
