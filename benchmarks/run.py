@@ -13,6 +13,9 @@ hardware):
                       (subprocess with 4 host devices, like the paper's 4 GPUs)
   table3_openllama    adaptive vs constant vs stagewise, ACCUM-NORM variant
 System benches:
+  serve               continuous-batching serving tier under bursty
+                      open-loop load (req/s, p99, warmed-rung transitions)
+                      -> BENCH_serve.json
   norm_test_overhead  us/call of the eq.(5) statistic vs param count;
                       step-time overhead of testing every step
   kernel_micro        Pallas kernels (interpret) vs jnp reference oracles
@@ -520,6 +523,36 @@ def _bench_step_per_bucket(nsteps):
     BENCH_JSON["step_per_bucket"] = out
 
 
+def bench_serve(steps):
+    """Continuous-batching serving tier (DESIGN §11) under bursty open-loop
+    load: sustained req/s, p50/p99 request latency, decode tok/s, engine
+    cache counters, and the steady-state probe (a request-batch-size change
+    served from a warmed rung: transition cache hits, ZERO new compiles).
+    Lands in BENCH_serve.json — its own trajectory file, separate from the
+    training-side BENCH_step.json."""
+    from repro.launch.serve import run_continuous_serving
+    tiny = bool(os.environ.get("BENCH_TINY"))
+    load = dict(max_slots=8, prompt_len=4, gen_len=8,
+                load_steps=30 if tiny else max(steps, 60),
+                arrival_rate=0.5, burst_every=10 if tiny else 20,
+                burst_size=5, aot_warmup=True)
+    t0 = time.time()
+    res = run_continuous_serving("llama3.2-1b", smoke=True, **load)
+    us = (time.time() - t0) / max(res["engine"]["steps"], 1) * 1e6
+    _row("serve/bursty", us,
+         req_per_s=round(res["sustained_req_per_s"], 2),
+         p99_s=round(res["p99_latency_s"], 3),
+         tok_per_s=round(res["decode_tok_per_s"], 1),
+         hit_rate=res["engine"]["hit_rate"],
+         steady_hit=res["probe"]["steady_state_transition_hit"])
+    out = {"load": load, **{k: v for k, v in res.items() if k != "rung_trace"},
+           "rung_trace": res["rung_trace"][:64]}
+    path = os.path.join(os.getcwd(), "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def bench_norm_test_overhead(steps):
     """us/call of the eq.(5) reduction at increasing gradient sizes, plus
     step-time overhead of test_interval=1 vs no testing."""
@@ -630,6 +663,7 @@ BENCHES = {
     "table2_tinyllama": bench_table2_tinyllama,
     "table3_openllama": bench_table3_openllama,
     "engine_cache": bench_engine_cache,
+    "serve": bench_serve,
     "flat_stats": bench_flat_stats,
     "norm_test_overhead": bench_norm_test_overhead,
     "norm_test_knobs": bench_norm_test_knobs,

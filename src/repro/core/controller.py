@@ -57,6 +57,11 @@ class ControllerState:
     step: int = 0
     samples: int = 0
     ema_stat: float = 0.0
+    # whether ema_stat holds a real observation yet.  `state.step > 0` is NOT
+    # a valid proxy: with test_interval > 1 the first tested step arrives at
+    # step >= 1 with ema_stat still at its 0.0 placeholder, and blending
+    # against it biased T toward 0, delaying the first batch increase.
+    ema_init: bool = False
     last_T: float = 0.0
     num_increases: int = 0
     at_max: bool = False
@@ -83,7 +88,7 @@ def controller_update(cfg: ControllerConfig, state: ControllerState,
     t_raw = norm_test_statistic(var_l1, grad_sqnorm, cfg.eta)
     if cfg.ema > 0:
         ema = cfg.ema * state.ema_stat + (1 - cfg.ema) * t_raw \
-            if state.step > 0 else t_raw
+            if state.ema_init else t_raw
         t_eff = ema
     else:
         ema = t_raw
@@ -108,8 +113,8 @@ def controller_update(cfg: ControllerConfig, state: ControllerState,
                       default=cfg.ladder[0].global_batch)
         return ControllerState(
             plan=plan, step=step, samples=new_samples, ema_stat=ema,
-            last_T=t_raw,
+            ema_init=True, last_T=t_raw,
             num_increases=state.num_increases + int(increased),
             at_max=plan.global_batch >= min(cfg.max_global_batch, cap))
     return replace(state, step=step, samples=new_samples, ema_stat=ema,
-                   last_T=t_raw)
+                   ema_init=True, last_T=t_raw)

@@ -124,115 +124,64 @@ def _plan_tag(plan: BatchPlan | None) -> str:
     return "none" if plan is None else f"{plan.micro_batch}x{plan.accum_steps}"
 
 
-class BucketedEngine:
-    """Keyed cache of compiled train steps over a bucket ladder.
+class RungCache:
+    """The shared rung-cache/warmup core (DESIGN §8/§11).
 
-    wrap        : the step builder from `make_fsdp_norm_step` /
-                  `make_accum_norm_step` (batch_like -> jitted step).
-    ladder      : tuple[BatchPlan] from `core.schedule.bucket_ladder`.
-    mesh        : bound while building/compiling (background threads must
-                  re-enter it; mesh contexts are thread-local).
-    params_like / opt_like : abstract step operands, only needed for
-                  `aot_warmup` (lower+compile needs the full signature).
-    coordinator : a `coordination.Coordinator` for multi-host runs (None =
-                  uncoordinated, bit-identical to the single-host engine):
-                  rung-entry barriers, warmup agreement, failure broadcast.
-    persistent_cache_dir : when set, wires JAX's persistent compilation
-                  cache (keyed per job/toolchain) so restarted or
-                  late-joining workers deserialize executables from disk;
-                  `stats.disk_cache_hits` counts the reuses.
-    """
+    A keyed cache of compiled executables with (a) per-key build rendezvous —
+    concurrent callers of the same key produce exactly ONE trace — and (b) a
+    single-worker background AOT-warmup pool with exactly-once failure
+    accounting.  Training's `BucketedEngine` and serving's
+    `distributed.serve_engine.ServeEngine` both subclass it; a subclass
+    supplies `_build` (foreground trace for a key's build argument) and
+    `_aot_build` (background build + lower + compile).
 
-    def __init__(self, wrap, ladder: tuple[BatchPlan, ...], *, mesh=None,
-                 params_like=None, opt_like=None, aot_warmup: bool = False,
-                 coordinator=None, persistent_cache_dir: str | None = None):
-        if not ladder:
-            raise ValueError("bucket ladder must have at least one rung")
-        self._wrap = wrap
-        # the builder's shared per-step-signature FlatLayout (None on the
-        # pure tree path): pinned at construction so every rung this engine
-        # compiles provably reuses ONE layout (DESIGN §9/§10)
-        self._flat_layout = getattr(wrap, "flat_layout", None)
-        self.ladder = tuple(sorted(ladder, key=lambda p: p.global_batch))
+    Thread safety: every `_cache`/`_pending`/`_building` access happens
+    under `_lock`; the blocking waits (a pending warmup's `result()`, the
+    actual trace) happen OUTSIDE it."""
+
+    def __init__(self, *, mesh=None, aot: bool = False, stats=None):
         self._mesh = mesh
-        self._params_like = params_like
-        self._opt_like = opt_like
-        self._aot = aot_warmup and params_like is not None
+        self._aot = bool(aot)
         self._cache: dict[tuple, object] = {}     # ALL access under _lock
         self._lock = threading.Lock()
         self._pool = ThreadPoolExecutor(max_workers=1) if self._aot else None
         self._pending: dict[tuple, object] = {}   # key -> warmup Future
         self._building: dict[tuple, Future] = {}  # key -> foreground build
         self._warmup_errors: list[Exception] = []
-        self._coord = coordinator
-        self._entered_key = None      # last rung key this host stepped in
-        self._agree_seq = 0           # monotone warmup-agreement topic id
-        self._agreed_for = None       # bucket tag the last agreement covered
-        self._agreed_target = None    # ...and the rung the fleet settled on
-        if persistent_cache_dir:
-            enable_persistent_cache(persistent_cache_dir)
-        # disk hits are a process-wide monitoring counter; this engine
-        # reports the delta since its construction (an engine restart with a
-        # warm cache directory therefore starts back at 0 and counts reuses)
-        self._disk_base = disk_cache_hits()
-        self.stats = EngineStats()
+        self.stats = stats if stats is not None else EngineStats()
 
-    # ------------------------------------------------------ quantization --
-
-    def bucket_for(self, desired_global: int,
-                   max_global: int | None = None) -> BatchPlan:
-        return quantize_to_ladder(desired_global, self.ladder, max_global)
-
-    def next_bucket(self, bucket: BatchPlan) -> BatchPlan | None:
-        """The next-larger rung (the AOT warmup target), or None at the top."""
-        for plan in self.ladder:
-            if plan.global_batch > bucket.global_batch:
-                return plan
-        return None
-
-    # ------------------------------------------------------------- cache --
+    # ------------------------------------------------------------- hooks --
 
     def _mesh_ctx(self):
         return (set_mesh(self._mesh) if self._mesh is not None
                 else contextlib.nullcontext())
 
-    def _build(self, batch_like):
-        with self._mesh_ctx():
-            fn = self._wrap(batch_like)
-        lay = getattr(self._wrap, "flat_layout", None)
-        if lay is not self._flat_layout:
-            raise RuntimeError(
-                "step builder changed its FlatLayout across bucket "
-                "signatures — the per-step-signature layout must be built "
-                "once and reused for every ladder rung (DESIGN §9/§10), or "
-                "flat-resident params/moments from one rung would not feed "
-                "the step compiled for the next")
-        return fn
+    def _build(self, build_arg):
+        """Foreground trace for one key (subclass hook)."""
+        raise NotImplementedError
 
-    def get_step(self, batch):
-        """The compiled step for this (padded) batch's signature; traces at
-        most once per signature across the run, even with concurrent
-        callers.  A background warmup that failed is recorded (surfaced
-        later by `drain()`) and the step falls back to a synchronous build.
+    def _aot_build(self, build_arg):
+        """Background build + AOT lower/compile for one key (subclass
+        hook); only called when the cache was constructed with aot=True."""
+        raise NotImplementedError
 
-        Thread safety: every `_cache` read/write happens under `_lock`
-        (a finishing AOT warmup and a foreground build used to race the
-        unlocked check, double-compiling and double-counting
-        `stats.compiles`).  The blocking waits — a pending warmup's
-        `result()` and the actual trace — happen OUTSIDE the lock;
-        concurrent foreground callers rendezvous on a per-key `Future` in
-        `_building`, so exactly one traces and the rest wait for it.
+    def _on_warmup_build_failure(self, key: tuple):
+        """Called from the warmup worker the moment its compile raises
+        (before the failure is consumed); coordination hook, default no-op."""
 
-        With a coordinator, stepping into a DIFFERENT signature than the
-        last step is a rung transition: remote warmup failures are polled
-        (a rung any host flagged gets its queued-not-started warmup dropped
-        — the coherent downgrade to the synchronous path) and the rung-entry
-        barrier holds this host until the whole fleet is ready to enter the
-        new executable together."""
-        key = _batch_key(batch)
-        if self._coord is not None and key != self._entered_key:
-            self._enter_rung(key)
-            self._entered_key = key
+    # ------------------------------------------------------------- cache --
+
+    def lookup(self, key: tuple, build_arg):
+        """The compiled executable for `key`; traces at most once per key
+        across the run, even with concurrent callers.  A background warmup
+        that failed is recorded (surfaced later by `drain()`) and the call
+        falls back to a synchronous build.
+
+        Every `_cache` read/write happens under `_lock` (a finishing AOT
+        warmup and a foreground build used to race the unlocked check,
+        double-compiling and double-counting `stats.compiles`).  Concurrent
+        foreground callers rendezvous on a per-key `Future` in `_building`,
+        so exactly one traces and the rest wait for it."""
         with self._lock:
             fut = self._pending.pop(key, None)
         if fut is not None:
@@ -257,7 +206,7 @@ class BucketedEngine:
                     mine = False
             if mine:
                 try:
-                    fn = self._build(_sds(batch))
+                    fn = self._build(build_arg)
                 except BaseException as e:
                     with self._lock:
                         self._building.pop(key, None)
@@ -278,6 +227,177 @@ class BucketedEngine:
                 bfut.result()
             except Exception:                  # noqa: BLE001 — builder raised
                 pass
+
+    def cached(self, key: tuple) -> bool:
+        """True when `key`'s executable is already resident (no build or
+        warmup-wait would be paid to use it)."""
+        with self._lock:
+            return key in self._cache
+
+    # ------------------------------------------------------- AOT warmup --
+
+    def submit_warmup(self, key: tuple, build_arg) -> bool:
+        """Queue a background AOT compile of `key`; no-op (False) when
+        warmup is disabled or the key is already cached/pending.
+
+        Stats accounting happens on COMPLETION inside the worker: a queued
+        compile that later fails contributes to `warmup_failures`, never to
+        `warmups`/`compiles`."""
+        if not self._aot:
+            return False
+        with self._lock:
+            if key in self._cache or key in self._pending:
+                return False
+            self._pending[key] = self._pool.submit(self._warm, build_arg, key)
+        return True
+
+    def _warm(self, build_arg, key):
+        try:
+            compiled = self._aot_build(build_arg)
+        except BaseException:
+            # failure hook fires IMMEDIATELY (not when the failed future is
+            # eventually consumed); local stats stay consumption-time —
+            # exactly once, in lookup/drain
+            self._on_warmup_build_failure(key)
+            raise
+        with self._lock:     # success: count the finished warmup
+            self.stats.warmups += 1
+            self.stats.compiles += 1
+        return compiled
+
+    def _record_warmup_failure(self, exc: Exception, key: tuple | None = None):
+        with self._lock:
+            self.stats.warmup_failures += 1
+            self._warmup_errors.append(exc)
+
+    def drain(self, raise_errors: bool = True):
+        """Block until queued warmups land in the cache (tests/teardown).
+
+        Warmup exceptions — both ones recorded earlier by `lookup`'s
+        fallback and ones surfacing now — are re-raised here (first one,
+        with the failure count) instead of being swallowed into cache
+        entries.  Pass raise_errors=False to only record them in
+        `stats.warmup_failures` (the training loop does this: a failed
+        warmup already fell back to a synchronous compile).
+
+        Accounting is per-future exactly-once: a future is CLAIMED by
+        atomically popping its key from `_pending` under the lock, and only
+        the claimant records its outcome.  (`drain` used to iterate a stale
+        snapshot of `_pending` while `get_step` popped and recorded the same
+        future's failure — the one exception inflated `warmup_failures` to 2
+        and a handled error was re-raised.)"""
+        while True:
+            with self._lock:
+                if not self._pending:
+                    break
+                key = next(iter(self._pending))
+                fut = self._pending.pop(key)
+            try:
+                fn = fut.result()
+            except Exception as e:               # noqa: BLE001
+                self._record_warmup_failure(e, key)
+            else:
+                with self._lock:   # cache writes stay under the lock
+                    self._cache.setdefault(key, fn)
+        with self._lock:
+            errors, count = list(self._warmup_errors), self.stats.warmup_failures
+            self._warmup_errors = []
+        if errors and raise_errors:
+            raise RuntimeError(
+                f"{count} AOT warmup compile(s) failed; first error follows"
+            ) from errors[0]
+
+
+class BucketedEngine(RungCache):
+    """Keyed cache of compiled train steps over a bucket ladder.
+
+    wrap        : the step builder from `make_fsdp_norm_step` /
+                  `make_accum_norm_step` (batch_like -> jitted step).
+    ladder      : tuple[BatchPlan] from `core.schedule.bucket_ladder`.
+    mesh        : bound while building/compiling (background threads must
+                  re-enter it; mesh contexts are thread-local).
+    params_like / opt_like : abstract step operands, only needed for
+                  `aot_warmup` (lower+compile needs the full signature).
+    coordinator : a `coordination.Coordinator` for multi-host runs (None =
+                  uncoordinated, bit-identical to the single-host engine):
+                  rung-entry barriers, warmup agreement, failure broadcast.
+    persistent_cache_dir : when set, wires JAX's persistent compilation
+                  cache (keyed per job/toolchain) so restarted or
+                  late-joining workers deserialize executables from disk;
+                  `stats.disk_cache_hits` counts the reuses.
+    """
+
+    def __init__(self, wrap, ladder: tuple[BatchPlan, ...], *, mesh=None,
+                 params_like=None, opt_like=None, aot_warmup: bool = False,
+                 coordinator=None, persistent_cache_dir: str | None = None):
+        if not ladder:
+            raise ValueError("bucket ladder must have at least one rung")
+        super().__init__(mesh=mesh,
+                         aot=aot_warmup and params_like is not None)
+        self._wrap = wrap
+        # the builder's shared per-step-signature FlatLayout (None on the
+        # pure tree path): pinned at construction so every rung this engine
+        # compiles provably reuses ONE layout (DESIGN §9/§10)
+        self._flat_layout = getattr(wrap, "flat_layout", None)
+        self.ladder = tuple(sorted(ladder, key=lambda p: p.global_batch))
+        self._params_like = params_like
+        self._opt_like = opt_like
+        self._coord = coordinator
+        self._entered_key = None      # last rung key this host stepped in
+        self._agree_seq = 0           # monotone warmup-agreement topic id
+        self._agreed_for = None       # bucket tag the last agreement covered
+        self._agreed_target = None    # ...and the rung the fleet settled on
+        if persistent_cache_dir:
+            enable_persistent_cache(persistent_cache_dir)
+        # disk hits are a process-wide monitoring counter; this engine
+        # reports the delta since its construction (an engine restart with a
+        # warm cache directory therefore starts back at 0 and counts reuses)
+        self._disk_base = disk_cache_hits()
+
+    # ------------------------------------------------------ quantization --
+
+    def bucket_for(self, desired_global: int,
+                   max_global: int | None = None) -> BatchPlan:
+        return quantize_to_ladder(desired_global, self.ladder, max_global)
+
+    def next_bucket(self, bucket: BatchPlan) -> BatchPlan | None:
+        """The next-larger rung (the AOT warmup target), or None at the top."""
+        for plan in self.ladder:
+            if plan.global_batch > bucket.global_batch:
+                return plan
+        return None
+
+    # ------------------------------------------------------------- cache --
+
+    def _build(self, batch_like):
+        with self._mesh_ctx():
+            fn = self._wrap(batch_like)
+        lay = getattr(self._wrap, "flat_layout", None)
+        if lay is not self._flat_layout:
+            raise RuntimeError(
+                "step builder changed its FlatLayout across bucket "
+                "signatures — the per-step-signature layout must be built "
+                "once and reused for every ladder rung (DESIGN §9/§10), or "
+                "flat-resident params/moments from one rung would not feed "
+                "the step compiled for the next")
+        return fn
+
+    def get_step(self, batch):
+        """The compiled step for this (padded) batch's signature; traces at
+        most once per signature across the run, even with concurrent
+        callers (`RungCache.lookup`).
+
+        With a coordinator, stepping into a DIFFERENT signature than the
+        last step is a rung transition: remote warmup failures are polled
+        (a rung any host flagged gets its queued-not-started warmup dropped
+        — the coherent downgrade to the synchronous path) and the rung-entry
+        barrier holds this host until the whole fleet is ready to enter the
+        new executable together."""
+        key = _batch_key(batch)
+        if self._coord is not None and key != self._entered_key:
+            self._enter_rung(key)
+            self._entered_key = key
+        return self.lookup(key, _sds(batch))
 
     def _enter_rung(self, key: tuple):
         """Multi-host rung transition (DESIGN §8.1): coherent-downgrade check
@@ -300,9 +420,7 @@ class BucketedEngine:
             self.stats.barrier_wait_s += wait
 
     def _record_warmup_failure(self, exc: Exception, key: tuple | None = None):
-        with self._lock:
-            self.stats.warmup_failures += 1
-            self._warmup_errors.append(exc)
+        super()._record_warmup_failure(exc, key)
         if self._coord is not None and key is not None:
             # fleet-wide coherence: every other host downgrades this rung to
             # the synchronous-build fallback instead of waiting on a warmup
@@ -345,12 +463,7 @@ class BucketedEngine:
                 (bucket.accum_steps, bucket.workers * bucket.micro_batch)
                 + tuple(v.shape[2:]), v.dtype)
             for k, v in batch_example.items()}
-        key = _batch_key(batch_like)
-        with self._lock:
-            if key in self._cache or key in self._pending:
-                return
-            self._pending[key] = self._pool.submit(
-                self._compile_aot, batch_like, key)
+        self.submit_warmup(_batch_key(batch_like), batch_like)
 
     def warmup_agreed(self, bucket: BatchPlan, batch_example: dict):
         """Coordinated AOT warmup: the fleet agrees on ONE next rung to
@@ -394,64 +507,27 @@ class BucketedEngine:
             self.warmup(self._agreed_target, batch_example)
         return self._agreed_target
 
-    def _compile_aot(self, batch_like, key):
-        try:
-            fn = self._build(batch_like)
-            with self._mesh_ctx():
-                compiled = fn.lower(
-                    self._params_like, self._opt_like, batch_like,
-                    jax.ShapeDtypeStruct((), jnp.float32)).compile()
-        except BaseException:
-            # broadcast IMMEDIATELY (not when this host eventually consumes
-            # the failed future): hosts polling at rung entry downgrade to
-            # the synchronous build instead of counting on a warmup that
-            # already died.  Local stats stay consumption-time — exactly
-            # once, in get_step/drain — and the broadcast is idempotent.
-            if self._coord is not None:
-                self._coord.broadcast_failure(_key_tag(key))
-            raise
-        with self._lock:     # success: count the finished warmup
-            self.stats.warmups += 1
-            self.stats.compiles += 1
-        return compiled
+    def _aot_build(self, batch_like):
+        fn = self._build(batch_like)
+        with self._mesh_ctx():
+            return fn.lower(
+                self._params_like, self._opt_like, batch_like,
+                jax.ShapeDtypeStruct((), jnp.float32)).compile()
+
+    def _on_warmup_build_failure(self, key: tuple):
+        # broadcast IMMEDIATELY (not when this host eventually consumes
+        # the failed future): hosts polling at rung entry downgrade to
+        # the synchronous build instead of counting on a warmup that
+        # already died.  Local stats stay consumption-time — exactly
+        # once, in get_step/drain — and the broadcast is idempotent.
+        if self._coord is not None:
+            self._coord.broadcast_failure(_key_tag(key))
 
     def drain(self, raise_errors: bool = True):
-        """Block until queued warmups land in the cache (tests/teardown).
-
-        Warmup exceptions — both ones recorded earlier by `get_step`'s
-        fallback and ones surfacing now — are re-raised here (first one,
-        with the failure count) instead of being swallowed into cache
-        entries.  Pass raise_errors=False to only record them in
-        `stats.warmup_failures` (the training loop does this: a failed
-        warmup already fell back to a synchronous compile).
-
-        Accounting is per-future exactly-once: a future is CLAIMED by
-        atomically popping its key from `_pending` under the lock, and only
-        the claimant records its outcome.  (`drain` used to iterate a stale
-        snapshot of `_pending` while `get_step` popped and recorded the same
-        future's failure — the one exception inflated `warmup_failures` to 2
-        and a handled error was re-raised.)"""
-        while True:
-            with self._lock:
-                if not self._pending:
-                    break
-                key = next(iter(self._pending))
-                fut = self._pending.pop(key)
-            try:
-                fn = fut.result()
-            except Exception as e:               # noqa: BLE001
-                self._record_warmup_failure(e, key)
-            else:
-                with self._lock:   # cache writes stay under the lock
-                    self._cache.setdefault(key, fn)
-        self._refresh_disk_hits()
-        with self._lock:
-            errors, count = list(self._warmup_errors), self.stats.warmup_failures
-            self._warmup_errors = []
-        if errors and raise_errors:
-            raise RuntimeError(
-                f"{count} AOT warmup compile(s) failed; first error follows"
-            ) from errors[0]
+        try:
+            super().drain(raise_errors)
+        finally:
+            self._refresh_disk_hits()
 
 
-__all__ = ["BucketedEngine", "EngineStats"]
+__all__ = ["BucketedEngine", "EngineStats", "RungCache"]

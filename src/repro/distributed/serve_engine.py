@@ -1,0 +1,334 @@
+"""Adaptive continuous-batching serve engine (DESIGN §11).
+
+The serving mirror of the training stack's recompile-free adaptive batching:
+where `BucketedEngine` quantizes the CONTROLLER's batch plan onto a shape
+ladder of precompiled train steps, `ServeEngine` quantizes the IN-FLIGHT
+request batch onto a powers-of-two rung ladder of precompiled decode steps
+(`serve_step.make_slot_decode_step`), shares the same `RungCache`
+concurrency core (per-key build rendezvous, background AOT warmup with
+exactly-once failure accounting), and adapts the active rung to measured
+load via `core.serve_controller` the way training adapts to gradient noise.
+
+Residency (the FlatLayout lesson applied to KV): ONE cache buffer is
+allocated at the top rung and never reallocated.  Requests own slot rows;
+admission zeroes a row, completion backfills the freed row from the highest
+active slot (`move_slot` — one compiled executable serves every (src, dst)
+pair), and a rung change re-slices the same buffer — zero cache bytes
+move, zero recompiles once the rung is warm.
+
+Continuous batching at token granularity: every in-flight request lives on
+its own timeline (per-slot position vectors, `models.attention`/`mla`
+vector-pos decode).  A newly admitted request streams its prompt through
+the SAME rung decode step (teacher-forced), then flips to generation — so
+prefill and decode share one executable per rung and requests join/leave
+the batch at any step.  Production prefill for long prompts would add a
+chunked full-sequence prefill executable per (rung, prompt-bucket); at this
+repo's smoke scale the streamed path keeps the executable count at one per
+rung (noted in DESIGN §11).
+
+Greedy decoding only (argmax inside the compiled step — one (b,) int32
+transfer per step, not a (b, vocab) logits readback).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.serve_controller import (
+    ServeControllerConfig, init_serve_controller, observe_step_latency,
+    serve_controller_update, serve_ladder)
+from repro.distributed.engine import EngineStats, RungCache
+from repro.distributed.serve_step import (
+    make_slot_decode_step, move_slot, reset_slot)
+
+
+@dataclass
+class ServeStats(EngineStats):
+    """Engine counters plus serving-tier accounting.  `steps` counts engine
+    decode iterations; `real_samples`/`padded_samples` reuse the training
+    meaning (occupied vs empty slot-rows per step), so `padding_waste` is
+    the fraction of decode rows burned on empty slots."""
+    requests_submitted: int = 0
+    requests_completed: int = 0
+    tokens_generated: int = 0     # generated (post-prompt) tokens only
+    prompt_tokens: int = 0        # prompt tokens streamed through decode
+    rung_transitions: int = 0     # steps whose rung differs from the last
+    transition_hits: int = 0      # ...that found the executable already warm
+    slot_resets: int = 0          # admissions (each zeroes one slot row)
+    slot_moves: int = 0           # compaction copies after completions
+
+    def as_dict(self) -> dict:
+        d = super().as_dict()
+        d.update({
+            "requests_submitted": self.requests_submitted,
+            "requests_completed": self.requests_completed,
+            "tokens_generated": self.tokens_generated,
+            "prompt_tokens": self.prompt_tokens,
+            "rung_transitions": self.rung_transitions,
+            "transition_hits": self.transition_hits,
+            "slot_resets": self.slot_resets,
+            "slot_moves": self.slot_moves,
+        })
+        return d
+
+
+@dataclass
+class Request:
+    """One in-flight generation request (host-side bookkeeping)."""
+    rid: int
+    prompt: np.ndarray                # (prompt_len,) int32
+    max_new_tokens: int
+    arrival_s: float
+    generated: list = field(default_factory=list)
+    pos: int = 0                      # next cache position its slot writes
+    n_consumed: int = 0               # prompt tokens streamed so far
+    first_token_s: float | None = None
+    done_s: float | None = None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.n_consumed < len(self.prompt)
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.done_s is None else self.done_s - self.arrival_s
+
+
+class ServeEngine(RungCache):
+    """Ladder-bucketed continuous-batching engine over one resident KV pool.
+
+    model / params : the served model (decoder-style `decode_step` API).
+    mesh           : decode-step sharding mesh (params replicated over data
+                     axes, cache slot-sharded when max_slots divides J).
+    max_slots      : top rung — the resident cache's slot-row count.
+    cache_len      : per-slot cache length; every request must satisfy
+                     prompt_len + max_new_tokens <= cache_len.
+    ladder         : ascending request-batch rungs (default: powers of two
+                     up to max_slots).
+    controller     : `ServeControllerConfig` (default: ladder + eager grow,
+                     patience-4 shrink, no latency SLO).
+    aot_warmup     : background-compile rungs adjacent to the active one so
+                     a controller rung change is a cache hit, not a stall.
+    """
+
+    def __init__(self, model, params, mesh, *, max_slots: int, cache_len: int,
+                 ladder: tuple[int, ...] | None = None,
+                 controller: ServeControllerConfig | None = None,
+                 aot_warmup: bool = False, ring: bool = False):
+        if ring:
+            raise NotImplementedError(
+                "ring-buffer slot caches need per-slot wrap accounting")
+        super().__init__(mesh=mesh, aot=aot_warmup, stats=ServeStats())
+        self.ladder = tuple(sorted(set(ladder))) if ladder else \
+            serve_ladder(max_slots)
+        if self.ladder[-1] > max_slots:
+            raise ValueError(
+                f"ladder top {self.ladder[-1]} exceeds max_slots {max_slots}")
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self._model = model
+        self._params = params
+        self._wrap, self._p_specs, cache_specs = make_slot_decode_step(
+            model, mesh, max_slots=max_slots,
+            params_like=jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params))
+
+        kv = model.init_cache(max_slots, cache_len)
+        self._kv_like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), kv)
+        self._c_specs = cache_specs(self._kv_like)
+        with self._mesh_ctx():
+            self._kv = jax.device_put(kv, jax.tree.map(
+                lambda s: NamedSharding(mesh, s), self._c_specs,
+                is_leaf=lambda s: isinstance(s, P)))
+        # slot maintenance executables: ONE compile each for the whole run
+        # (src/dst/slot are traced scalars), resident buffer donated through
+        self._move = jax.jit(move_slot, donate_argnums=(0,))
+        self._reset = jax.jit(reset_slot, donate_argnums=(0,))
+
+        self._ctrl_cfg = controller or ServeControllerConfig(ladder=self.ladder)
+        if self._ctrl_cfg.ladder != self.ladder:
+            raise ValueError("controller ladder must match engine ladder")
+        self.ctrl = init_serve_controller(self._ctrl_cfg)
+        self.queue: deque[Request] = deque()
+        self._active: list[Request] = []      # index == slot row
+        self._last_rung: int | None = None
+        self._next_rid = 0
+
+    # --------------------------------------------------------- admission --
+
+    @property
+    def num_active(self) -> int:
+        return len(self._active)
+
+    @property
+    def current_rung(self) -> int:
+        return self.ladder[self.ctrl.rung]
+
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_s: float | None = None) -> Request:
+        """Enqueue one request; decode work happens in `step()`."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"prompt_len {len(prompt)} + max_new_tokens {max_new_tokens} "
+                f"exceeds cache_len {self.cache_len}")
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      arrival_s=time.time() if arrival_s is None else arrival_s)
+        self._next_rid += 1
+        self.queue.append(req)
+        self.stats.requests_submitted += 1
+        return req
+
+    def _admit(self, req: Request):
+        slot = len(self._active)
+        self._kv = self._reset(self._kv, jnp.int32(slot))
+        self.stats.slot_resets += 1
+        req.pos = 0
+        req.n_consumed = 0
+        self._active.append(req)
+
+    # -------------------------------------------------------- decode step --
+
+    def _rung_key(self, b: int) -> tuple:
+        return ("decode", b, self.cache_len)
+
+    def _build(self, b: int):
+        with self._mesh_ctx():
+            return self._wrap(b, self._kv_like)
+
+    def _aot_build(self, b: int):
+        with self._mesh_ctx():
+            fn = self._wrap(b, self._kv_like)
+            tok = jax.ShapeDtypeStruct((b,), jnp.int32)
+            return fn.lower(self._params_sds(), self._kv_like, tok, tok
+                            ).compile()
+
+    def _params_sds(self):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self._params)
+
+    def warm(self, rungs) -> None:
+        """Queue background AOT compiles for the given rung batch sizes."""
+        for b in rungs:
+            if b in self.ladder:
+                self.submit_warmup(self._rung_key(b), b)
+
+    def _warm_adjacent(self, rung_idx: int):
+        """The serve analog of train's next-rung warmup: the controller
+        moves one rung at a time, so compile BOTH neighbors ahead of it."""
+        for j in (rung_idx + 1, rung_idx - 1):
+            if 0 <= j < len(self.ladder):
+                self.submit_warmup(self._rung_key(self.ladder[j]),
+                                   self.ladder[j])
+
+    def step(self) -> dict | None:
+        """One engine iteration: controller decision, admissions, one
+        compiled decode step at the active rung, host-side advance +
+        completions.  Returns a step report, or None when idle."""
+        if not self._active and not self.queue:
+            return None
+        self.ctrl = serve_controller_update(
+            self._ctrl_cfg, self.ctrl, queued=len(self.queue),
+            active=len(self._active))
+        rung_idx = self.ctrl.rung
+        b = self.ladder[rung_idx]
+        while self.queue and len(self._active) < b:
+            self._admit(self.queue.popleft())
+
+        key = self._rung_key(b)
+        if b != self._last_rung:
+            if self._last_rung is not None:
+                self.stats.rung_transitions += 1
+                if self.cached(key):
+                    self.stats.transition_hits += 1
+            self._last_rung = b
+        fn = self.lookup(key, b)
+
+        tokens = np.zeros((b,), np.int32)
+        pos = np.zeros((b,), np.int32)
+        for s, r in enumerate(self._active):
+            tokens[s] = (r.prompt[r.n_consumed] if r.prefilling
+                         else r.generated[-1])
+            pos[s] = r.pos
+        t0 = time.time()
+        with self._mesh_ctx():
+            out_tok, self._kv = fn(self._params, self._kv,
+                                   jnp.asarray(tokens), jnp.asarray(pos))
+        out = np.asarray(out_tok)            # blocks on the device step
+        dt = time.time() - t0
+        self.ctrl = observe_step_latency(self._ctrl_cfg, self.ctrl,
+                                         rung_idx, dt)
+        if self._aot:
+            self._warm_adjacent(rung_idx)
+
+        completed = self._advance(out)
+        self.stats.steps += 1
+        self.stats.real_samples += len(self._active) + len(completed)
+        self.stats.padded_samples += b - len(self._active) - len(completed)
+        tag = str(b)
+        if tag not in self.stats.buckets_used:
+            self.stats.buckets_used.append(tag)
+        return {"rung": b, "active": len(self._active),
+                "queued": len(self.queue), "step_s": dt,
+                "completed": completed}
+
+    def _advance(self, out: np.ndarray) -> list[Request]:
+        """Fold one step's sampled tokens into per-request state; retire
+        finished requests and compact their slots (highest active slot
+        backfills the freed row — its cache row moves, nothing else)."""
+        now = time.time()
+        done_slots = []
+        for s, r in enumerate(self._active):
+            if r.prefilling:
+                r.n_consumed += 1
+                self.stats.prompt_tokens += 1
+                if not r.prefilling:     # last prompt token -> first output
+                    r.generated.append(int(out[s]))
+                    r.first_token_s = now
+                    self.stats.tokens_generated += 1
+            else:
+                r.generated.append(int(out[s]))
+                self.stats.tokens_generated += 1
+            r.pos += 1
+            if (len(r.generated) >= r.max_new_tokens
+                    or r.pos >= self.cache_len):
+                r.done_s = now
+                done_slots.append(s)
+        completed = [self._active[s] for s in done_slots]
+        for s in sorted(done_slots, reverse=True):
+            last = len(self._active) - 1
+            if s != last:
+                self._kv = self._move(self._kv, jnp.int32(last),
+                                      jnp.int32(s))
+                self._active[s] = self._active[last]
+                self.stats.slot_moves += 1
+            self._active.pop()
+        self.stats.requests_completed += len(completed)
+        return completed
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        """Step until queue and in-flight batch are empty; returns every
+        request completed along the way."""
+        done: list[Request] = []
+        for _ in range(max_steps):
+            report = self.step()
+            if report is None:
+                return done
+            done.extend(report["completed"])
+        raise RuntimeError(f"not drained after {max_steps} steps "
+                           f"(active={len(self._active)}, "
+                           f"queued={len(self.queue)})")
+
+
+__all__ = ["Request", "ServeEngine", "ServeStats"]

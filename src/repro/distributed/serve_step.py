@@ -1,6 +1,12 @@
 """Serving steps under GSPMD: prefill (full-sequence forward producing the KV
 cache) and decode (one token against the cache).  These are what the
-decode_32k / long_500k dry-run shapes lower."""
+decode_32k / long_500k dry-run shapes lower.
+
+`make_slot_decode_step` + the slot-cache primitives below are the
+continuous-batching serving tier's device half (DESIGN §11): ONE resident
+KV buffer sized for the top request-batch rung, rung-sliced compiled decode
+steps over its leading rows, and slot reset/compaction ops so requests
+reuse slots without a reallocation or recompile."""
 
 from __future__ import annotations
 
@@ -81,3 +87,109 @@ def make_prefill(model, mesh, *, batch: int, params_like=None, jit: bool = True)
             b_shardings))
 
     return wrap, p_specs
+
+
+# ------------------------------------------------- resident slot caches ----
+
+# leading batch ("slot") axis of each decode-cache group: prefix-layer
+# entries are (b, ...), scanned entries carry the repeat axis first
+_SLOT_AXIS = {"prefix": 0, "scanned": 1, "cross_prefix": 0, "cross_scanned": 1}
+
+
+def _map_slots(cache: dict, fn):
+    """Apply `fn(leaf, slot_axis)` over every leaf of a decode cache."""
+    return {k: jax.tree.map(lambda x: fn(x, _SLOT_AXIS[k]), sub)
+            for k, sub in cache.items()}
+
+
+def slice_slots(cache: dict, n: int) -> dict:
+    """The first `n` slot rows of every cache leaf (static slice)."""
+    return _map_slots(
+        cache, lambda x, ax: jax.lax.slice_in_dim(x, 0, n, axis=ax))
+
+
+def update_slots(full: dict, sub: dict, n: int) -> dict:
+    """Write an updated `n`-row sub-cache back into rows [0, n) of the
+    resident buffer; rows >= n (free or other-rung slots) are untouched."""
+    return {k: jax.tree.map(
+        lambda f, s, ax=_SLOT_AXIS[k]: jax.lax.dynamic_update_slice_in_dim(
+            f, s.astype(f.dtype), 0, axis=ax),
+        full[k], new) for k, new in sub.items()}
+
+
+def move_slot(cache: dict, src, dst) -> dict:
+    """Copy slot row `src` over slot row `dst` (compaction after a request
+    completes: the highest active slot backfills the freed one).  `src` and
+    `dst` are traced scalars — ONE compile serves every (src, dst) pair."""
+    def mv(x, ax):
+        row = jax.lax.dynamic_slice_in_dim(x, src, 1, axis=ax)
+        return jax.lax.dynamic_update_slice_in_dim(x, row, dst, axis=ax)
+    return _map_slots(cache, mv)
+
+
+def reset_slot(cache: dict, slot) -> dict:
+    """Zero slot row `slot` (admission: recurrent states need a fresh
+    carry; attention rows are overwritten position-by-position as the new
+    request advances, but zeroing keeps every cache kind uniform)."""
+    def rz(x, ax):
+        zero = jnp.zeros(
+            x.shape[:ax] + (1,) + x.shape[ax + 1:], x.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(x, zero, slot, axis=ax)
+    return _map_slots(cache, rz)
+
+
+def make_slot_decode_step(model, mesh, *, max_slots: int, params_like=None,
+                          jit: bool = True):
+    """Rung-sliced decode over a resident slot cache (DESIGN §11).
+
+    The KV cache is allocated ONCE at the ladder's top rung (`max_slots`
+    rows) and never reallocated.  The returned builder compiles one step
+    per ACTIVE rung `b`: slice rows [0, b) out of every cache leaf, decode
+    one token per row at PER-SLOT positions (each in-flight request lives
+    on its own timeline), greedily pick the next token, and write the
+    updated rows back.  The resident buffer is donated through, so a rung
+    change moves zero cache bytes — and once the rung's executable is warm,
+    compiles nothing.
+
+    Returns (wrap, p_specs, c_specs_fn): `wrap(b, cache_like)` -> jitted
+    `step(params, cache, tokens (b,), pos (b,)) -> (next_tok (b,), cache)`.
+    """
+    rules = _serve_rules(mesh, max_slots)
+    daxes = data_axes(mesh)
+    workers = num_workers(mesh)
+    batch_ok = max_slots % workers == 0
+
+    if params_like is None:
+        params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_pspecs(params_like, mesh, fsdp=False)
+
+    def cache_specs(cache_like):
+        return cache_pspecs(cache_like, mesh, batch_divisible=batch_ok)
+
+    def wrap(b: int, cache_like):
+        if not (1 <= b <= max_slots):
+            raise ValueError(f"rung {b} outside resident pool [1, {max_slots}]")
+
+        def step(params, cache, tokens, pos):
+            sub = slice_slots(cache, b)
+            with use_sharding_rules(rules, mesh):
+                logits, new_sub = model.decode_step(params, sub, tokens, pos)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, update_slots(cache, new_sub, b)
+
+        if not jit:
+            return step
+        c_specs = cache_specs(cache_like)
+        tok_sharding = NamedSharding(
+            mesh, P(daxes) if (batch_ok and b % workers == 0) else P())
+        return jax.jit(
+            step,
+            in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs,
+                             is_leaf=lambda s: isinstance(s, P)),
+                tok_sharding, tok_sharding),
+            donate_argnums=(1,))
+
+    return wrap, p_specs, cache_specs

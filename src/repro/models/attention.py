@@ -185,26 +185,36 @@ def init_cache(batch: int, cache_len: int, num_kv_heads: int, head_dim: int, dty
 
 def attend_decode(params, x, cache, pos, *, rope_theta, softcap=0.0,
                   ring: bool = False, qk_norm=False):
-    """Single-token decode. x: (b,1,d); pos: scalar int32 global position.
-    Returns (out, new_cache).  `ring=True` treats the cache as a circular
-    sliding-window buffer of length cache_len."""
+    """Single-token decode. x: (b,1,d); pos: scalar int32 global position,
+    or a (b,) int32 vector of PER-ROW positions (continuous-batching serving:
+    each cache row advances on its own timeline, writes its own slot, and
+    masks its own prefix).  Returns (out, new_cache).  `ring=True` treats the
+    cache as a circular sliding-window buffer of length cache_len."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(params, x, positions, rope_theta, qk_norm)
     cache_len = cache["k"].shape[1]
     slot = pos % cache_len if ring else pos
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
+    if per_row:
+        rows = jnp.arange(b)
+        k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
     kpos = jnp.arange(cache_len)
+    ppos = pos[:, None] if per_row else pos   # broadcasts over (b, cache_len)
     if ring:
         # valid slots: all once pos>=cache_len-1, else slots <= pos
-        valid = kpos <= jnp.maximum(pos, cache_len - 1)
-        valid &= (kpos <= pos) | (pos >= cache_len)
+        valid = kpos <= jnp.maximum(ppos, cache_len - 1)
+        valid &= (kpos <= ppos) | (ppos >= cache_len)
     else:
-        valid = kpos <= pos
-    mask = valid[None, None, :]
+        valid = kpos <= ppos
+    mask = valid[:, None, :] if per_row else valid[None, None, :]
     out = _sdpa_grouped(q, k.astype(x.dtype), v.astype(x.dtype), mask, softcap)
     out = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype),
                      preferred_element_type=x.dtype)

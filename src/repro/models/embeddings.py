@@ -48,11 +48,15 @@ def apply_rope(x, positions, theta: float):
 
 
 def sinusoidal_at(pos, d: int, dtype):
-    """Sinusoidal embedding row at (possibly traced) scalar position `pos`."""
+    """Sinusoidal embedding row(s) at (possibly traced) position `pos`:
+    scalar -> (d,); a (b,) vector of per-row positions -> (b, d)."""
     log_timescale = jnp.log(10000.0) / (d // 2 - 1)
     inv_timescales = jnp.exp(-log_timescale * jnp.arange(d // 2, dtype=jnp.float32))
-    scaled = pos.astype(jnp.float32) * inv_timescales if hasattr(pos, "astype") \
-        else float(pos) * inv_timescales
+    if hasattr(pos, "astype"):
+        p = pos.astype(jnp.float32)
+        scaled = (p[:, None] if p.ndim == 1 else p) * inv_timescales
+    else:
+        scaled = float(pos) * inv_timescales
     return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=-1).astype(dtype)
 
 

@@ -111,15 +111,28 @@ def init_mla_cache(batch: int, cache_len: int, m: MLAConfig, dtype):
 
 
 def mla_decode(params, x, cache, pos, m: MLAConfig, ring: bool = False):
-    """Absorbed-form single-token decode against the latent cache."""
+    """Absorbed-form single-token decode against the latent cache.  `pos` is
+    a scalar int32, or a (b,) int32 vector of per-row positions (continuous-
+    batching serving — each row writes and masks its own timeline)."""
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((b, 1), pos, jnp.int32)
     q_nope, q_rope = _queries(params, x, positions, m)          # (b,1,h,*)
     c_new, kr_new = _latents(params, x, positions, m)           # (b,1,r)
     cache_len = cache["c_kv"].shape[1]
     slot = pos % cache_len if ring else pos
-    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
-    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+    if per_row:
+        rows = jnp.arange(b)
+        c_kv = cache["c_kv"].at[rows, slot].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, slot].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
+    else:
+        c_kv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+        k_rope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, slot, 0))
     # absorb W_uk into the query: attend in latent space
     q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, params["w_uk"].astype(x.dtype))
     scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
@@ -127,11 +140,13 @@ def mla_decode(params, x, cache, pos, m: MLAConfig, ring: bool = False):
     logits += jnp.einsum("bthr,bsr->bhts", q_rope, k_rope.astype(x.dtype))
     logits = logits.astype(jnp.float32) * scale
     kpos = jnp.arange(cache_len)
+    ppos = pos[:, None] if per_row else pos
     if ring:
-        valid = (kpos <= pos) | (pos >= cache_len)
+        valid = (kpos <= ppos) | (ppos >= cache_len)
     else:
-        valid = kpos <= pos
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        valid = kpos <= ppos
+    logits = jnp.where(valid[:, None, None, :] if per_row
+                       else valid[None, None, None, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
     out_lat = jnp.einsum("bhts,bsr->bthr", probs, c_kv.astype(x.dtype))
     out = jnp.einsum("bthr,rhv->bthv", out_lat, params["w_uv"].astype(x.dtype))

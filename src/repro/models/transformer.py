@@ -289,13 +289,15 @@ def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int, ring: bool =
 
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, ring: bool = False):
-    """One decode step. tokens: (b,) int32; pos: scalar int32 (global position).
+    """One decode step. tokens: (b,) int32; pos: scalar int32 global position
+    or a (b,) int32 vector of per-row positions (continuous-batching serving).
     Returns (logits (b, vocab), new_cache)."""
     prefix_kinds, prefix_moe, pattern, pattern_moe, repeats = _layer_plan(cfg)
     x = embed_tokens(params["embed"], tokens[:, None], cfg.scale_embed, cfg.d_model)
     x = x.astype(cfg.act_dtype)
     if cfg.pos_embed == "sinusoidal":
-        x = x + sinusoidal_at(jnp.asarray(pos), cfg.d_model, x.dtype)[None, None, :]
+        emb = sinusoidal_at(jnp.asarray(pos), cfg.d_model, x.dtype)
+        x = x + (emb[:, None, :] if emb.ndim == 2 else emb[None, None, :])
 
     new_prefix = []
     for i, (p, kind, moe_layer) in enumerate(

@@ -140,3 +140,32 @@ def test_ladder_controller_test_interval_skips(workers):
     s = controller_update(cfg, s, var_l1=1e9, grad_sqnorm=1.0)  # step 4
     assert s.plan.global_batch > base
     assert s.plan.global_batch in {p.global_batch for p in cfg.ladder}
+
+
+def test_ema_first_tested_step_seeds_not_blends():
+    """Regression: the EMA cold start must SEED from the first real
+    observation.  The old `state.step > 0` proxy for "EMA holds data"
+    failed with test_interval > 1 — the first tested step arrives at
+    step >= 1 with ema_stat still 0.0, and blending against the
+    placeholder halved T_k (ema=0.5), undershooting the first increase."""
+    cfg = ControllerConfig(eta=0.5, workers=2, base_micro_batch=1,
+                           max_micro_batch=1, base_accum=1,
+                           base_global_batch=2, max_global_batch=4096,
+                           test_interval=3, ema=0.5)
+    s = init_controller(cfg)
+    assert not s.ema_init
+    s = controller_update(cfg, s, 100.0, 1.0)   # step 1: skipped
+    s = controller_update(cfg, s, 100.0, 1.0)   # step 2: skipped
+    assert not s.ema_init and s.ema_stat == 0.0
+    # step 3: first tested step.  T_raw = 100/(0.25*1) = 400.  Seeded EMA
+    # must be exactly 400 (the bug blended: 0.5*0 + 0.5*400 = 200) and the
+    # plan must cover the full statistic, not half of it.
+    s = controller_update(cfg, s, 100.0, 1.0)
+    assert s.ema_init
+    assert s.ema_stat == pytest.approx(400.0)
+    assert s.plan.global_batch >= 400
+    # step 6: second tested step DOES blend: 0.5*400 + 0.5*100 = 250
+    s = controller_update(cfg, s, 25.0, 1.0)
+    s = controller_update(cfg, s, 25.0, 1.0)
+    s = controller_update(cfg, s, 25.0, 1.0)
+    assert s.ema_stat == pytest.approx(250.0)

@@ -1,0 +1,258 @@
+"""Continuous-batching serving tier (DESIGN §11): serve controller units,
+slot-cache primitives, ServeEngine correctness (solo-equivalence under
+continuous batching, slot reuse, staggered joins), rung-reuse cache-hit
+accounting, and the 2-device decode-sharding path."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.serve_controller import (
+    ServeControllerConfig, init_serve_controller, observe_step_latency,
+    serve_controller_update, serve_ladder, quantize_batch)
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ------------------------------------------------------ controller units ----
+
+def test_serve_ladder_shapes():
+    assert serve_ladder(8) == (1, 2, 4, 8)
+    assert serve_ladder(1) == (1,)
+    assert serve_ladder(6) == (1, 2, 4, 6)    # non-power cap is the top rung
+    assert quantize_batch(3, (1, 2, 4, 8)) == 4
+    assert quantize_batch(100, (1, 2, 4, 8)) == 8
+
+
+def test_serve_controller_grow_and_shrink_hysteresis():
+    cfg = ServeControllerConfig(ladder=(1, 2, 4, 8))
+    s = init_serve_controller(cfg)
+    # demand above capacity: eager growth, one rung per decision
+    s = serve_controller_update(cfg, s, queued=5, active=1)
+    assert cfg.ladder[s.rung] == 2
+    s = serve_controller_update(cfg, s, queued=4, active=2)
+    assert cfg.ladder[s.rung] == 4
+    # trough: shrink needs shrink_patience consecutive slack decisions
+    for i in range(cfg.shrink_patience - 1):
+        s = serve_controller_update(cfg, s, queued=0, active=1)
+        assert cfg.ladder[s.rung] == 4, i
+    s = serve_controller_update(cfg, s, queued=0, active=1)
+    assert cfg.ladder[s.rung] == 2
+    # a single demand spike resets the shrink streak
+    s2 = serve_controller_update(cfg, s, queued=0, active=1)
+    s2 = serve_controller_update(cfg, s2, queued=9, active=1)
+    s2 = serve_controller_update(cfg, s2, queued=0, active=1)
+    assert s2.shrink_streak == 1
+
+
+def test_serve_controller_latency_veto_and_ema_seed():
+    cfg = ServeControllerConfig(ladder=(1, 2, 4), latency_slo_s=0.1, ema=0.5)
+    s = init_serve_controller(cfg)
+    # first observation SEEDS the rung EMA (explicit init flag, no blend
+    # against the 0.0 placeholder — the training controller's cold-start bug)
+    s = observe_step_latency(cfg, s, rung=1, step_time_s=0.4)
+    assert s.lat_init[1] and s.lat_ema[1] == pytest.approx(0.4)
+    s = observe_step_latency(cfg, s, rung=1, step_time_s=0.2)
+    assert s.lat_ema[1] == pytest.approx(0.3)
+    # growth into a rung whose measured latency violates the SLO is vetoed
+    s = serve_controller_update(cfg, s, queued=5, active=1)
+    assert s.rung == 0 and s.latency_vetoes == 1
+    # unknown-latency rungs are not vetoed (measure first, judge later)
+    cfg2 = ServeControllerConfig(ladder=(1, 2, 4), latency_slo_s=0.1)
+    s2 = init_serve_controller(cfg2)
+    s2 = serve_controller_update(cfg2, s2, queued=5, active=1)
+    assert s2.rung == 1
+
+
+def test_serve_controller_never_shrinks_below_active():
+    cfg = ServeControllerConfig(ladder=(1, 2, 4, 8))
+    s = init_serve_controller(cfg)
+    s = serve_controller_update(cfg, s, queued=7, active=1)
+    s = serve_controller_update(cfg, s, queued=6, active=2)
+    assert cfg.ladder[s.rung] == 4
+    for _ in range(20):   # 3 active requests never fit rung 2
+        s = serve_controller_update(cfg, s, queued=0, active=3)
+    assert cfg.ladder[s.rung] == 4
+
+
+# ------------------------------------------------- slot-cache primitives ----
+
+def test_slot_move_reset_roundtrip():
+    from repro.distributed.serve_step import (
+        _SLOT_AXIS, _map_slots, move_slot, reset_slot, slice_slots,
+        update_slots)
+    cfg = get_smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    cache = model.init_cache(4, 8)
+
+    def fill(x, ax):
+        ids = jnp.arange(1, x.shape[ax] + 1, dtype=jnp.float32)
+        shape = [1] * x.ndim
+        shape[ax] = x.shape[ax]
+        return jnp.broadcast_to(ids.reshape(shape), x.shape).astype(x.dtype)
+
+    def slot_vals(c, slot):
+        """First element of the given slot row, per leaf."""
+        return [float(jnp.take(leaf, slot, axis=_SLOT_AXIS[k]).ravel()[0])
+                for k, sub in c.items() for leaf in jax.tree.leaves(sub)]
+
+    filled = _map_slots(cache, fill)
+    moved = move_slot(filled, jnp.int32(3), jnp.int32(0))
+    # slot 0 now holds slot 3's value; slot 3 itself is unchanged
+    assert all(v == 4.0 for v in slot_vals(moved, 0))
+    assert all(v == 4.0 for v in slot_vals(moved, 3))
+    assert all(v == 2.0 for v in slot_vals(moved, 1))
+    wiped = reset_slot(moved, jnp.int32(3))
+    assert all(v == 0.0 for v in slot_vals(wiped, 3))
+    assert all(v == 4.0 for v in slot_vals(wiped, 0))
+    # slice/update round-trip touches rows [0, n) only
+    sub = slice_slots(wiped, 2)
+    back = update_slots(wiped, jax.tree.map(lambda x: x * 0 - 1, sub), 2)
+    assert all(v == -1.0 for v in slot_vals(back, 0))
+    assert all(v == -1.0 for v in slot_vals(back, 1))
+    assert slot_vals(back, 2) == slot_vals(wiped, 2)
+
+
+# ----------------------------------------------------------- the engine ----
+
+def _engine(arch="llama3.2-1b", max_slots=4, cache_len=16, **kw):
+    from repro.distributed.serve_engine import ServeEngine
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    mesh = make_host_mesh(1, 1)
+    eng = ServeEngine(model, params, mesh, max_slots=max_slots,
+                      cache_len=cache_len, **kw)
+    return cfg, model, params, eng
+
+
+def _solo_greedy(model, params, prompt, max_new, cache_len):
+    """Reference: one request decoded alone in a fresh batch-1 cache."""
+    cache = model.init_cache(1, cache_len)
+    out = []
+    for i in range(len(prompt) + max_new - 1):
+        t = prompt[i] if i < len(prompt) else out[-1]
+        lg, cache = model.decode_step(params, cache,
+                                      jnp.asarray([t], jnp.int32),
+                                      jnp.int32(i))
+        nt = int(jnp.argmax(lg[0]))
+        if i >= len(prompt) - 1:
+            out.append(nt)
+    return out
+
+
+def test_engine_matches_solo_decode_and_reuses_slots():
+    """Requests batched continuously (joining/leaving mid-flight, slots
+    compacted and reused) must generate EXACTLY what each would alone —
+    the slot-residency invariant: stale KV above a row's pos is never
+    attended, every position is overwritten before it is read."""
+    cfg, model, params, eng = _engine()
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(3,)).astype(np.int32)
+               for _ in range(5)]
+    reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    for r in reqs:
+        assert r.generated == _solo_greedy(model, params, list(r.prompt), 4,
+                                           eng.cache_len), r.rid
+    # second wave into RECYCLED slots (no cache realloc, rows were used by
+    # wave 1) must match wave 1 token-for-token
+    reqs2 = [eng.submit(p, max_new_tokens=4) for p in prompts[:2]]
+    eng.run_until_drained()
+    for a, b in zip(reqs, reqs2):
+        assert a.generated == b.generated
+    assert eng.stats.slot_resets == 7
+    assert eng.stats.requests_completed == 7
+
+
+def test_engine_staggered_joins_match_solo():
+    """A request admitted while others are mid-generation (joining a
+    half-used batch at pos 0 while neighbors sit at pos > 0) decodes as if
+    it were alone — per-slot position vectors keep every timeline honest."""
+    cfg, model, params, eng = _engine(max_slots=4)
+    rng = np.random.RandomState(1)
+    p1 = rng.randint(0, cfg.vocab_size, size=(4,)).astype(np.int32)
+    p2 = rng.randint(0, cfg.vocab_size, size=(2,)).astype(np.int32)
+    r1 = eng.submit(p1, max_new_tokens=6)
+    for _ in range(3):
+        eng.step()                      # r1 is mid-prefill/decode
+    r2 = eng.submit(p2, max_new_tokens=5)   # joins a live batch
+    eng.run_until_drained()
+    assert r1.generated == _solo_greedy(model, params, list(p1), 6,
+                                        eng.cache_len)
+    assert r2.generated == _solo_greedy(model, params, list(p2), 5,
+                                        eng.cache_len)
+
+
+def test_engine_rung_growth_hits_warmed_cache():
+    """The tentpole's acceptance shape: warm the ladder, then force a
+    request-batch-size change at steady state — the rung transition must be
+    a cache HIT (transition_hits) with ZERO new compiles."""
+    cfg, model, params, eng = _engine(max_slots=4, aot_warmup=True)
+    rng = np.random.RandomState(2)
+    eng.warm(eng.ladder)
+    eng.drain(raise_errors=True)
+    assert eng.stats.warmups == len(eng.ladder)
+    compiles0 = eng.stats.compiles
+    for _ in range(4):                  # demand 4 forces rung 1 -> 2 -> 4
+        eng.submit(rng.randint(0, cfg.vocab_size, size=(2,)).astype(np.int32),
+                   max_new_tokens=3)
+    eng.run_until_drained()
+    assert eng.stats.compiles == compiles0          # zero foreground builds
+    assert eng.stats.rung_transitions >= 1
+    assert eng.stats.transition_hits == eng.stats.rung_transitions
+    assert eng.stats.hit_rate == 1.0
+
+
+def test_engine_cold_transition_counts_miss():
+    """Without warmup, a rung change compiles in the foreground and is NOT
+    counted as a transition hit — the accounting distinguishes the two."""
+    cfg, model, params, eng = _engine(max_slots=4, aot_warmup=False)
+    rng = np.random.RandomState(3)
+    for _ in range(4):
+        eng.submit(rng.randint(0, cfg.vocab_size, size=(2,)).astype(np.int32),
+                   max_new_tokens=3)
+    eng.run_until_drained()
+    assert eng.stats.rung_transitions >= 1
+    assert eng.stats.transition_hits == 0
+    assert eng.stats.warmups == 0
+    assert eng.stats.compiles >= 2
+
+
+def test_engine_submit_validation():
+    cfg, model, params, eng = _engine(cache_len=8)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.zeros((0,), np.int32), max_new_tokens=2)
+    with pytest.raises(ValueError, match="cache_len"):
+        eng.submit(np.zeros((5,), np.int32), max_new_tokens=4)
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs 2 host devices (tests-multidevice job)")
+def test_engine_two_device_decode_sharding():
+    """On a (2, 1) data mesh the resident cache and per-step token vectors
+    shard over the data axis (max_slots % workers == 0) and results still
+    match the solo reference."""
+    from repro.distributed.serve_engine import ServeEngine
+    cfg = get_smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    params = model.init(KEY)
+    mesh = make_host_mesh(2, 1)
+    eng = ServeEngine(model, params, mesh, max_slots=4, cache_len=16)
+    rng = np.random.RandomState(4)
+    prompts = [rng.randint(0, cfg.vocab_size, size=(3,)).astype(np.int32)
+               for _ in range(4)]
+    reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+    eng.run_until_drained()
+    for r in reqs:
+        assert r.generated == _solo_greedy(model, params, list(r.prompt), 4,
+                                           eng.cache_len)
+    # the resident pool is genuinely sharded over the data axis
+    leaf = jax.tree.leaves(eng._kv)[0]
+    assert len(leaf.sharding.device_set) == 2

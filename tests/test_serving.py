@@ -1,5 +1,7 @@
 """Serving-path tests: ring-window equivalence, whisper enc-dec decode vs
 teacher forcing, VLM prefix decode vs forward, serve driver smoke."""
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -89,3 +91,59 @@ def test_serve_driver_smoke():
                       gen_len=8)
     assert res["tokens"].shape == (2, 8)
     assert res["decode_tok_per_s"] > 0
+
+
+def test_serve_driver_accounting():
+    """Regressions for the serving-driver timing/throughput fixes: the
+    decode timer sees gen_len - 1 tokens per sequence (the first generated
+    token falls out of the prefill phase), and the throughput numerator
+    must match — the old batch * gen_len overstated tok/s."""
+    from repro.launch.serve import run_serving
+    batch, gen_len = 2, 8
+    res = run_serving("llama3.2-1b", smoke=True, batch=batch, prompt_len=4,
+                      gen_len=gen_len)
+    assert res["decode_tokens_timed"] == batch * (gen_len - 1)
+    assert res["decode_tok_per_s"] == pytest.approx(
+        res["decode_tokens_timed"] / res["decode_s"])
+
+
+def test_serve_driver_gen_len_one():
+    """gen_len=1: the only generated token comes from prefill; the decode
+    loop runs zero iterations and throughput must report 0, not divide a
+    phantom batch*1 tokens by an ~0 timer."""
+    from repro.launch.serve import run_serving
+    res = run_serving("llama3.2-1b", smoke=True, batch=2, prompt_len=4,
+                      gen_len=1)
+    assert res["tokens"].shape == (2, 1)
+    assert res["decode_tokens_timed"] == 0
+    assert res["decode_tok_per_s"] == 0.0
+
+
+def test_serve_driver_blocks_before_prefill_clock(monkeypatch):
+    """The prefill timer must fence the async dispatch: block_until_ready
+    runs before each phase clock is read, so prefill compute cannot leak
+    into the decode measurement."""
+    import repro.launch.serve as serve_mod
+    calls = []
+    real = jax.block_until_ready
+
+    def spy(x):
+        calls.append(time.time())
+        return real(x)
+
+    monkeypatch.setattr(serve_mod.jax, "block_until_ready", spy)
+    serve_mod.run_serving("llama3.2-1b", smoke=True, batch=1, prompt_len=2,
+                          gen_len=2)
+    assert len(calls) >= 2   # one fence per timed phase
+
+
+def test_serve_driver_vision_prompt_too_short():
+    """vision_stub edge: a prompt budget fully consumed by the frontend's
+    prefix tokens must fail with a clear error, not crash on prompts[:, 0]."""
+    from repro.configs import get_smoke_config
+    from repro.launch.serve import run_serving
+    cfg = get_smoke_config("internvl2-1b")
+    npfx = cfg.frontend.num_prefix_tokens
+    with pytest.raises(ValueError, match="prefix tokens"):
+        run_serving("internvl2-1b", smoke=True, batch=1, prompt_len=npfx,
+                    gen_len=2)
