@@ -13,16 +13,32 @@ caller's residency, bit-exactly, even across backends with different
 default bucket sizes: the reader rebuilds the writer's layout from the
 metadata, unflattens, and (for a flat reader) re-flattens at its own
 layout — both hops are exact slices/concats.
+
+Crash atomicity (DESIGN §12): both files of a checkpoint are written to
+temp names and `os.replace`d, json FIRST — `latest_step` keys on the npz,
+so the only states a crash at any instant can leave are (a) temp litter a
+later save cleans up, (b) a json without its npz (invisible to
+`latest_step`), or (c) a complete npz+json pair.  A torn or unreadable
+checkpoint surfaces as a typed `CheckpointError` naming the file, never a
+partial silent restore.  One writer per directory is assumed (the train
+driver's `checkpoint_dir` is per-host).
 """
 
 from __future__ import annotations
 
+import contextlib
 import json
 import os
-import tempfile
 
 import jax
 import numpy as np
+
+from repro.testing.faults import fault_point
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is missing, torn, or inconsistent with the reader's
+    expected structure — restore refuses to proceed partially."""
 
 
 def _flatten_with_paths(tree):
@@ -34,43 +50,95 @@ def _flatten_with_paths(tree):
     return flat
 
 
+def _clean_stale_tmp(directory: str) -> None:
+    """Drop temp litter a crashed writer left behind (single-writer dirs)."""
+    for f in os.listdir(directory):
+        if f.startswith("ckpt_") and ".tmp" in f:
+            with contextlib.suppress(OSError):
+                os.remove(os.path.join(directory, f))
+
+
 def save_checkpoint(directory: str, step: int, tree, metadata: dict | None = None):
     os.makedirs(directory, exist_ok=True)
+    _clean_stale_tmp(directory)
     flat = _flatten_with_paths(tree)
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
-    os.close(fd)
-    np.savez(tmp, **flat)
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    meta_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+    tmp_npz = f"{path}.tmp{os.getpid()}"
+    tmp_json = f"{meta_path}.tmp{os.getpid()}"
+    with open(tmp_npz, "wb") as f:       # a file OBJECT: savez appends no suffix
+        np.savez(f, **flat)
+        f.flush()
+        os.fsync(f.fileno())
     meta = {"step": step, **(metadata or {})}
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+    with open(tmp_json, "w") as f:
         json.dump(meta, f, indent=2, default=str)
+        f.flush()
+        os.fsync(f.fileno())
+    fault_point("ckpt.save.before_commit", path=path)
+    # json first: the npz's visibility implies its metadata already exists,
+    # so `latest_step` (npz-keyed) only ever names complete pairs
+    os.replace(tmp_json, meta_path)
+    os.replace(tmp_npz, path)
+    fault_point("ckpt.saved", path=path)
     return path
 
 
 def latest_step(directory: str) -> int | None:
+    """The newest step with a COMPLETE npz+json pair (a crash mid-save can
+    leave temp litter or a lone json; neither is restorable)."""
     if not os.path.isdir(directory):
         return None
     steps = [int(f[5:13]) for f in os.listdir(directory)
-             if f.startswith("ckpt_") and f.endswith(".npz")]
+             if f.startswith("ckpt_") and f.endswith(".npz")
+             and ".tmp" not in f
+             and os.path.exists(os.path.join(directory, f[:-4] + ".json"))]
     return max(steps) if steps else None
 
 
+def _open_npz(path: str):
+    if not os.path.exists(path):
+        raise CheckpointError(f"checkpoint {path} does not exist")
+    try:
+        return np.load(path)
+    except Exception as e:   # zipfile.BadZipFile, OSError, ValueError...
+        raise CheckpointError(
+            f"checkpoint {path} is unreadable (truncated or corrupt): "
+            f"{e}") from e
+
+
+def _get_array(data, key: str, path: str):
+    try:
+        return data[key]
+    except KeyError:
+        raise CheckpointError(
+            f"checkpoint {path} has no entry {key!r} — it was saved from a "
+            "different state structure than the reader's") from None
+    except Exception as e:   # torn member: zlib/zipfile error mid-extract
+        raise CheckpointError(
+            f"checkpoint {path} entry {key!r} is torn or corrupt: {e}") from e
+
+
 def restore_checkpoint(directory: str, step: int, like_tree):
-    """Restore into the structure of `like_tree` (shape/dtype validated)."""
+    """Restore into the structure of `like_tree` (shape/dtype validated);
+    any torn file / missing entry / shape mismatch is a `CheckpointError`,
+    never a partial restore."""
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    data = np.load(path)
+    data = _open_npz(path)
     flat_like = _flatten_with_paths(like_tree)
     restored_flat = {}
     for key, like in flat_like.items():
-        arr = data[key]
-        assert arr.shape == like.shape, (key, arr.shape, like.shape)
+        arr = _get_array(data, key, path)
+        if arr.shape != like.shape:
+            raise CheckpointError(
+                f"checkpoint {path} entry {key!r} has shape {arr.shape}, "
+                f"reader expects {like.shape}")
         restored_flat[key] = arr.astype(like.dtype)
     # rebuild in tree order
     paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
     leaves = []
-    for path, _ in paths:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    for path_, _ in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_)
         leaves.append(restored_flat[key])
     return jax.tree_util.tree_unflatten(treedef, leaves), _read_meta(
         directory, step)
@@ -111,19 +179,23 @@ def restore_params(directory: str, step: int, params_like):
     if fl:
         from repro.distributed.flatbuf import FlatLayout
         path = os.path.join(directory, f"ckpt_{step:08d}.npz")
-        data = np.load(path)
+        data = _open_npz(path)
         layout = FlatLayout.from_tree(
             params_like, bucket_bytes=int(fl["bucket_bytes"]),
             shard_divisor=int(fl["shard_divisor"]))
         buffers = []
         for i, (size, dt) in enumerate(zip(layout.buffer_sizes,
                                            layout.buffer_dtypes)):
-            arr = data[f"params/{i}"]
-            assert arr.shape == (size,), (i, arr.shape, size)
-            assert arr.dtype == dt, (
-                f"buffer {i}: checkpoint dtype {arr.dtype} != reader's "
-                f"layout dtype {dt} — flat-resident restore requires "
-                f"matching param dtypes")
+            arr = _get_array(data, f"params/{i}", path)
+            if arr.shape != (size,):
+                raise CheckpointError(
+                    f"checkpoint {path} params buffer {i} has shape "
+                    f"{arr.shape}, writer's layout says ({size},)")
+            if arr.dtype != dt:
+                raise CheckpointError(
+                    f"buffer {i}: checkpoint dtype {arr.dtype} != reader's "
+                    f"layout dtype {dt} — flat-resident restore requires "
+                    f"matching param dtypes")
             buffers.append(arr)
         return layout.unflatten(buffers), metadata
     # tree-resident: delegate to the standard leaf-keyed restore on the

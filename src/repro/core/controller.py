@@ -17,6 +17,7 @@ Extras beyond Algorithm 1 (all off by default, recorded in DESIGN §7):
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field, replace
 
@@ -69,6 +70,31 @@ class ControllerState:
 
 def init_controller(cfg: ControllerConfig) -> ControllerState:
     return ControllerState(plan=_resolve_plan(cfg, cfg.base_global_batch))
+
+
+# ------------------------------------------- state (de)serialization ----
+#
+# The controller is half the training loop's host-side state (the other
+# half — params/opt — lives on device): crash-safe checkpointing must
+# capture it EXACTLY or a resumed run re-derives a different batch
+# trajectory and bit-identity with the uninterrupted run is lost.  JSON
+# round-trips Python floats exactly (repr-based shortest form), so
+# ema_stat/last_T survive the hop bit-for-bit.
+
+def controller_state_as_dict(state: ControllerState) -> dict:
+    """JSON-safe snapshot of the full controller state (checkpoint
+    metadata); `controller_state_from_dict` is the exact inverse."""
+    return dataclasses.asdict(state)
+
+
+def controller_state_from_dict(d: dict) -> ControllerState:
+    """Rebuild a `ControllerState` saved by `controller_state_as_dict`."""
+    plan = BatchPlan(**{k: int(v) for k, v in d["plan"].items()})
+    return ControllerState(
+        plan=plan, step=int(d["step"]), samples=int(d["samples"]),
+        ema_stat=float(d["ema_stat"]), ema_init=bool(d["ema_init"]),
+        last_T=float(d["last_T"]), num_increases=int(d["num_increases"]),
+        at_max=bool(d["at_max"]))
 
 
 def norm_test_statistic(var_l1: float, grad_sqnorm: float, eta: float) -> float:

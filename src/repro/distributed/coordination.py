@@ -64,6 +64,32 @@ import zlib
 
 import numpy as np
 
+from repro.testing.faults import fault_point
+
+
+class CoordinationError(TimeoutError):
+    """A coordination operation failed with structured blame: which ranks
+    never arrived, and which of those are provably DEAD (their liveness
+    heartbeat went stale after having been seen).  Subclasses TimeoutError
+    so pre-liveness callers that caught the bare timeout keep working.
+
+    The train driver catches this to checkpoint-and-exit cleanly instead of
+    hanging the surviving ranks (DESIGN §12)."""
+
+    def __init__(self, message: str, *, missing=(), dead=()):
+        super().__init__(message)
+        self.missing_ranks = tuple(missing)
+        self.dead_ranks = tuple(dead)
+
+
+def _blame(missing, dead) -> str:
+    parts = []
+    if missing:
+        parts.append(f"missing ranks: {sorted(missing)}")
+    if dead:
+        parts.append(f"dead ranks (stale heartbeat): {sorted(dead)}")
+    return "; ".join(parts) if parts else "all ranks present"
+
 
 # ------------------------------------------------------------ protocol ----
 
@@ -137,19 +163,80 @@ class FileCoordinator(Coordinator):
     worker re-running the same deterministic step sequence skips barriers
     the fleet already passed and catches up to the live one.  Re-running
     an IDENTICAL job from scratch should use a fresh root.
+
+    Liveness (DESIGN §12): a daemon thread refreshes ``hb/<rank>`` every
+    `heartbeat_s`; a rank whose heartbeat was seen but has gone stale by
+    more than `dead_after` seconds is DEAD.  A barrier whose missing ranks
+    are all dead fails fast with a `CoordinationError` naming them instead
+    of burning the full timeout, and every timeout names the missing/dead
+    ranks rather than just a count.  A rank that never wrote a heartbeat is
+    only *missing* (it may still be launching), so slow joiners get the
+    whole timeout.  Polling backs off exponentially from `poll_s` to
+    `poll_max_s` so fleet-scale shared filesystems aren't hammered at 200
+    stats/s per rank for long waits.
     """
 
     def __init__(self, root: str, rank: int, world: int, *,
                  timeout: float = 120.0, poll_s: float = 0.005,
-                 run_id: str = ""):
+                 poll_max_s: float = 0.05, heartbeat_s: float | None = None,
+                 dead_after: float | None = None, run_id: str = ""):
         if world < 1 or not (0 <= rank < world):
             raise ValueError(f"bad coordinator geometry rank={rank} world={world}")
         self.root = os.path.abspath(
             os.path.join(root, _fs_safe(run_id)) if run_id else root)
         self.rank, self.world = rank, world
         self.timeout, self.poll_s = timeout, poll_s
+        self.poll_max_s = max(poll_max_s, poll_s)
+        self.heartbeat_s = (heartbeat_s if heartbeat_s is not None else float(
+            os.environ.get("REPRO_COORD_HEARTBEAT_S", "1.0")))
+        self.dead_after = (dead_after if dead_after is not None else float(
+            os.environ.get("REPRO_COORD_DEAD_AFTER_S",
+                           str(10.0 * self.heartbeat_s))))
         self._gens: dict[str, int] = {}     # per-name barrier generation
-        os.makedirs(self.root, exist_ok=True)
+        self._hb_dir = os.path.join(self.root, "hb")
+        os.makedirs(self._hb_dir, exist_ok=True)
+        self._stop = threading.Event()
+        self._beat()                         # visible before any barrier
+        self._hb_thread = threading.Thread(
+            target=self._heartbeat_loop, name=f"coord-hb-{rank}", daemon=True)
+        self._hb_thread.start()
+
+    # ------------------------------------------------------------ liveness --
+
+    def _beat(self) -> None:
+        self._atomic_write(os.path.join(self._hb_dir, str(self.rank)),
+                           repr(time.time()))
+
+    def _heartbeat_loop(self) -> None:
+        while not self._stop.wait(self.heartbeat_s):
+            try:
+                self._beat()
+            except OSError:          # transient FS hiccup: stale beats are
+                continue             # what the next refresh repairs
+
+    def dead_ranks(self) -> frozenset:
+        """Ranks whose heartbeat was SEEN but is now stale by > dead_after
+        (started, then died/hung).  Never-seen ranks are not here — they may
+        still be launching."""
+        now = time.time()
+        dead = set()
+        for r in range(self.world):
+            if r == self.rank:
+                continue
+            p = os.path.join(self._hb_dir, str(r))
+            try:
+                if now - os.path.getmtime(p) > self.dead_after:
+                    dead.add(r)
+            except OSError:
+                continue             # no heartbeat yet: unknown, not dead
+        return frozenset(dead)
+
+    def close(self) -> None:
+        self._stop.set()
+        if self._hb_thread.is_alive():
+            self._hb_thread.join(timeout=2 * self.heartbeat_s + 1.0)
+
+    # ---------------------------------------------------------- primitives --
 
     def _atomic_write(self, path: str, content: str) -> None:
         tmp = f"{path}.tmp{self.rank}"
@@ -157,24 +244,45 @@ class FileCoordinator(Coordinator):
             f.write(content)
         os.replace(tmp, path)
 
+    def _poll_wait(self, waited_polls: int) -> None:
+        """Exponential backoff: 5 ms doubling to the 50 ms cap, so a long
+        barrier wait costs ~20 stats/s per rank instead of 200."""
+        time.sleep(min(self.poll_s * (2 ** min(waited_polls, 16)),
+                       self.poll_max_s))
+
     def barrier(self, name, timeout=None):
         timeout = self.timeout if timeout is None else timeout
+        fault_point("coord.barrier", name=name, rank=self.rank)
         gen = self._gens[name] = self._gens.get(name, 0) + 1
         d = os.path.join(self.root, "barrier", f"{_fs_safe(name)}.{gen}")
         os.makedirs(d, exist_ok=True)
         self._atomic_write(os.path.join(d, str(self.rank)), "")
         t0 = time.monotonic()
+        polls = 0
         while True:
-            arrived = len(os.listdir(d))
-            if arrived >= self.world:
+            present = set()
+            for f in os.listdir(d):
+                try:                 # skip in-flight .tmp<rank> writes
+                    present.add(int(f))
+                except ValueError:
+                    continue
+            if len(present) >= self.world:
                 return time.monotonic() - t0
-            if time.monotonic() - t0 > timeout:
-                raise TimeoutError(
+            missing = set(range(self.world)) - present
+            dead = self.dead_ranks() & missing
+            timed_out = time.monotonic() - t0 > timeout
+            if timed_out or (missing and missing <= dead):
+                # every missing rank provably died: fail fast — waiting the
+                # rest of the timeout cannot change the outcome
+                raise CoordinationError(
                     f"coordination barrier {name!r} (generation {gen}): "
-                    f"{arrived}/{self.world} hosts arrived within {timeout:.1f}s "
-                    f"— a host died or desynchronized; coordination dir: "
-                    f"{self.root}")
-            time.sleep(self.poll_s)
+                    f"{len(present)}/{self.world} hosts arrived"
+                    + (f" within {timeout:.1f}s" if timed_out else
+                       " and every missing rank's heartbeat is stale")
+                    + f" — {_blame(missing, dead)}; coordination dir: "
+                    f"{self.root}", missing=missing, dead=dead)
+            self._poll_wait(polls)
+            polls += 1
 
     def agree(self, topic, payload):
         d = os.path.join(self.root, "agree")
@@ -189,12 +297,19 @@ class FileCoordinator(Coordinator):
             with open(path) as f:
                 return f.read()
         t0 = time.monotonic()
+        polls = 0
         while not os.path.exists(path):
-            if time.monotonic() - t0 > self.timeout:
-                raise TimeoutError(
-                    f"warmup agreement {topic!r}: leader published nothing "
-                    f"within {self.timeout:.1f}s (coordination dir: {self.root})")
-            time.sleep(self.poll_s)
+            leader_dead = 0 in self.dead_ranks()
+            if time.monotonic() - t0 > self.timeout or leader_dead:
+                raise CoordinationError(
+                    f"warmup agreement {topic!r}: leader (rank 0) published "
+                    "nothing"
+                    + (" and its heartbeat is stale" if leader_dead else
+                       f" within {self.timeout:.1f}s")
+                    + f" (coordination dir: {self.root})",
+                    missing=(0,), dead=((0,) if leader_dead else ()))
+            self._poll_wait(polls)
+            polls += 1
         with open(path) as f:
             return f.read()
 
@@ -265,16 +380,31 @@ class DistributedCoordinator(Coordinator):
 
     def barrier(self, name, timeout=None):
         from jax.experimental import multihost_utils
+        fault_point("coord.barrier", name=name, rank=self.rank)
         t0 = time.monotonic()
-        rows = multihost_utils.process_allgather(
-            _pack_str(json.dumps(sorted(self._local))))
+        try:
+            rows = multihost_utils.process_allgather(
+                _pack_str(json.dumps(sorted(self._local))))
+        except Exception as e:
+            # the runtime's collective/heartbeat machinery already decided a
+            # peer is gone; re-raise TYPED so the train driver's
+            # checkpoint-and-exit path triggers (it cannot name the rank —
+            # the runtime's error text usually does)
+            raise CoordinationError(
+                f"distributed barrier {name!r} failed across "
+                f"{self.world} processes (a peer likely died): {e}") from e
         for row in np.atleast_2d(rows):
             self._known.update(json.loads(_unpack_str(row) or "[]"))
         return time.monotonic() - t0
 
     def agree(self, topic, payload):
         from jax.experimental import multihost_utils
-        out = multihost_utils.broadcast_one_to_all(_pack_str(payload))
+        try:
+            out = multihost_utils.broadcast_one_to_all(_pack_str(payload))
+        except Exception as e:
+            raise CoordinationError(
+                f"distributed agreement {topic!r} failed (leader or a peer "
+                f"died mid-broadcast): {e}", missing=(0,)) from e
         return _unpack_str(out)
 
     def broadcast_failure(self, tag):
@@ -367,7 +497,7 @@ def enable_persistent_cache(cache_dir: str) -> str:
 
 
 __all__ = [
-    "Coordinator", "NoOpCoordinator", "FileCoordinator",
+    "CoordinationError", "Coordinator", "NoOpCoordinator", "FileCoordinator",
     "DistributedCoordinator", "make_coordinator",
     "enable_persistent_cache", "disk_cache_hits",
 ]

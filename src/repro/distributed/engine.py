@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
+import time
 import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -46,6 +47,7 @@ import jax.numpy as jnp
 from repro.compat import set_mesh
 from repro.core.schedule import BatchPlan, quantize_to_ladder
 from repro.distributed.coordination import disk_cache_hits, enable_persistent_cache
+from repro.testing.faults import fault_point
 
 
 @dataclass
@@ -58,7 +60,8 @@ class EngineStats:
     compiles: int = 0          # distinct traces built (>= 1 per bucket used)
     hits: int = 0              # steps served from the cache
     warmups: int = 0           # buckets compiled ahead of time
-    warmup_failures: int = 0   # background compiles that raised
+    warmup_failures: int = 0   # background compiles that PERMANENTLY failed
+    warmup_retries: int = 0    # transient warmup-compile attempts retried
     steps: int = 0
     real_samples: int = 0
     padded_samples: int = 0
@@ -89,6 +92,7 @@ class EngineStats:
             "hits": self.hits,
             "warmups": self.warmups,
             "warmup_failures": self.warmup_failures,
+            "warmup_retries": self.warmup_retries,
             "steps": self.steps,
             "hit_rate": round(self.hit_rate, 4),
             "padding_waste": round(self.padding_waste, 4),
@@ -137,9 +141,18 @@ class RungCache:
 
     Thread safety: every `_cache`/`_pending`/`_building` access happens
     under `_lock`; the blocking waits (a pending warmup's `result()`, the
-    actual trace) happen OUTSIDE it."""
+    actual trace) happen OUTSIDE it.
 
-    def __init__(self, *, mesh=None, aot: bool = False, stats=None):
+    Transient-failure policy (DESIGN §12): a background warmup compile that
+    raises is retried up to `warmup_retries` times with exponential backoff
+    (`warmup_backoff_s`, doubling) before it is treated as PERMANENT —
+    only then does `_on_warmup_build_failure` fire (on the coordinated
+    engine that hook broadcasts the failure fleet-wide, so a one-off OOM
+    or filesystem blip no longer downgrades every host for the rest of the
+    run).  Retry attempts are counted in `stats.warmup_retries`."""
+
+    def __init__(self, *, mesh=None, aot: bool = False, stats=None,
+                 warmup_retries: int = 2, warmup_backoff_s: float = 0.05):
         self._mesh = mesh
         self._aot = bool(aot)
         self._cache: dict[tuple, object] = {}     # ALL access under _lock
@@ -148,6 +161,8 @@ class RungCache:
         self._pending: dict[tuple, object] = {}   # key -> warmup Future
         self._building: dict[tuple, Future] = {}  # key -> foreground build
         self._warmup_errors: list[Exception] = []
+        self._warmup_retries = max(0, int(warmup_retries))
+        self._warmup_backoff_s = warmup_backoff_s
         self.stats = stats if stats is not None else EngineStats()
 
     # ------------------------------------------------------------- hooks --
@@ -206,6 +221,7 @@ class RungCache:
                     mine = False
             if mine:
                 try:
+                    fault_point("engine.compile", key=key)
                     fn = self._build(build_arg)
                 except BaseException as e:
                     with self._lock:
@@ -252,14 +268,30 @@ class RungCache:
         return True
 
     def _warm(self, build_arg, key):
-        try:
-            compiled = self._aot_build(build_arg)
-        except BaseException:
-            # failure hook fires IMMEDIATELY (not when the failed future is
-            # eventually consumed); local stats stay consumption-time —
-            # exactly once, in lookup/drain
-            self._on_warmup_build_failure(key)
-            raise
+        attempt = 0
+        while True:
+            try:
+                fault_point("engine.warmup_compile", key=key, attempt=attempt)
+                compiled = self._aot_build(build_arg)
+                break
+            except Exception:
+                # transient until proven otherwise: bounded retry-with-
+                # backoff BEFORE the permanent-failure hook (which, under
+                # coordination, broadcasts the downgrade fleet-wide)
+                if attempt >= self._warmup_retries:
+                    self._on_warmup_build_failure(key)
+                    raise
+                attempt += 1
+                with self._lock:
+                    self.stats.warmup_retries += 1
+                time.sleep(self._warmup_backoff_s * (2 ** (attempt - 1)))
+            except BaseException:
+                # interrupts/exits are never retried; the hook still fires
+                # IMMEDIATELY (not when the failed future is eventually
+                # consumed) — local stats stay consumption-time, exactly
+                # once, in lookup/drain
+                self._on_warmup_build_failure(key)
+                raise
         with self._lock:     # success: count the finished warmup
             self.stats.warmups += 1
             self.stats.compiles += 1
@@ -329,11 +361,14 @@ class BucketedEngine(RungCache):
 
     def __init__(self, wrap, ladder: tuple[BatchPlan, ...], *, mesh=None,
                  params_like=None, opt_like=None, aot_warmup: bool = False,
-                 coordinator=None, persistent_cache_dir: str | None = None):
+                 coordinator=None, persistent_cache_dir: str | None = None,
+                 warmup_retries: int = 2, warmup_backoff_s: float = 0.05):
         if not ladder:
             raise ValueError("bucket ladder must have at least one rung")
         super().__init__(mesh=mesh,
-                         aot=aot_warmup and params_like is not None)
+                         aot=aot_warmup and params_like is not None,
+                         warmup_retries=warmup_retries,
+                         warmup_backoff_s=warmup_backoff_s)
         self._wrap = wrap
         # the builder's shared per-step-signature FlatLayout (None on the
         # pure tree path): pinned at construction so every rung this engine

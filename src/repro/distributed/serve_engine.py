@@ -49,6 +49,18 @@ from repro.distributed.serve_step import (
     make_slot_decode_step, move_slot, reset_slot)
 
 
+class QueueFullError(RuntimeError):
+    """Admission control: the engine's wait queue is at `max_queue` and this
+    request was REJECTED (never enqueued).  Callers load-shed — retry later
+    or route elsewhere; unbounded queues just convert overload into
+    unbounded latency."""
+
+    def __init__(self, message: str, *, queued: int = 0, max_queue: int = 0):
+        super().__init__(message)
+        self.queued = queued
+        self.max_queue = max_queue
+
+
 @dataclass
 class ServeStats(EngineStats):
     """Engine counters plus serving-tier accounting.  `steps` counts engine
@@ -57,6 +69,7 @@ class ServeStats(EngineStats):
     the fraction of decode rows burned on empty slots."""
     requests_submitted: int = 0
     requests_completed: int = 0
+    requests_rejected: int = 0    # load-shed at submit (queue at max_queue)
     tokens_generated: int = 0     # generated (post-prompt) tokens only
     prompt_tokens: int = 0        # prompt tokens streamed through decode
     rung_transitions: int = 0     # steps whose rung differs from the last
@@ -69,6 +82,7 @@ class ServeStats(EngineStats):
         d.update({
             "requests_submitted": self.requests_submitted,
             "requests_completed": self.requests_completed,
+            "requests_rejected": self.requests_rejected,
             "tokens_generated": self.tokens_generated,
             "prompt_tokens": self.prompt_tokens,
             "rung_transitions": self.rung_transitions,
@@ -121,7 +135,8 @@ class ServeEngine(RungCache):
     def __init__(self, model, params, mesh, *, max_slots: int, cache_len: int,
                  ladder: tuple[int, ...] | None = None,
                  controller: ServeControllerConfig | None = None,
-                 aot_warmup: bool = False, ring: bool = False):
+                 aot_warmup: bool = False, ring: bool = False,
+                 max_queue: int = 0):
         if ring:
             raise NotImplementedError(
                 "ring-buffer slot caches need per-slot wrap accounting")
@@ -156,6 +171,9 @@ class ServeEngine(RungCache):
         self._ctrl_cfg = controller or ServeControllerConfig(ladder=self.ladder)
         if self._ctrl_cfg.ladder != self.ladder:
             raise ValueError("controller ladder must match engine ladder")
+        if max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {max_queue}")
+        self.max_queue = max_queue            # 0 = unbounded (the default)
         self.ctrl = init_serve_controller(self._ctrl_cfg)
         self.queue: deque[Request] = deque()
         self._active: list[Request] = []      # index == slot row
@@ -174,7 +192,12 @@ class ServeEngine(RungCache):
 
     def submit(self, prompt, max_new_tokens: int,
                arrival_s: float | None = None) -> Request:
-        """Enqueue one request; decode work happens in `step()`."""
+        """Enqueue one request; decode work happens in `step()`.
+
+        Raises `QueueFullError` (and counts `requests_rejected`) when the
+        wait queue already holds `max_queue` requests — malformed requests
+        (empty prompt, cache overrun) stay ValueError and count as neither
+        submitted nor rejected."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) < 1:
             raise ValueError("empty prompt")
@@ -182,6 +205,12 @@ class ServeEngine(RungCache):
             raise ValueError(
                 f"prompt_len {len(prompt)} + max_new_tokens {max_new_tokens} "
                 f"exceeds cache_len {self.cache_len}")
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            self.stats.requests_rejected += 1
+            raise QueueFullError(
+                f"serve queue full: {len(self.queue)} queued >= max_queue "
+                f"{self.max_queue} (request rejected, not enqueued)",
+                queued=len(self.queue), max_queue=self.max_queue)
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       arrival_s=time.time() if arrival_s is None else arrival_s)
@@ -331,4 +360,4 @@ class ServeEngine(RungCache):
                            f"queued={len(self.queue)})")
 
 
-__all__ = ["Request", "ServeEngine", "ServeStats"]
+__all__ = ["QueueFullError", "Request", "ServeEngine", "ServeStats"]

@@ -88,7 +88,7 @@ def run_continuous_serving(arch: str, *, smoke=True, max_slots=8,
                            prompt_len=4, gen_len=8, load_steps=60,
                            arrival_rate=0.5, burst_every=20, burst_size=5,
                            mesh_data=1, mesh_model=1, seed=0,
-                           latency_slo_s=0.0, aot_warmup=True):
+                           latency_slo_s=0.0, aot_warmup=True, max_queue=0):
     """Bursty open-loop load against the continuous-batching serve tier.
 
     An open-loop arrival process (Poisson at `arrival_rate` requests per
@@ -109,19 +109,22 @@ def run_continuous_serving(arch: str, *, smoke=True, max_slots=8,
     params = model.init(jax.random.PRNGKey(seed))
     mesh = make_host_mesh(data=mesh_data, model=mesh_model)
     from repro.core.serve_controller import ServeControllerConfig, serve_ladder
-    from repro.distributed.serve_engine import ServeEngine
+    from repro.distributed.serve_engine import QueueFullError, ServeEngine
 
     cache_len = prompt_len + gen_len
     engine = ServeEngine(
         model, params, mesh, max_slots=max_slots, cache_len=cache_len,
         controller=ServeControllerConfig(ladder=serve_ladder(max_slots),
                                          latency_slo_s=latency_slo_s),
-        aot_warmup=aot_warmup)
+        aot_warmup=aot_warmup, max_queue=max_queue)
     rng = np.random.default_rng(seed)
 
     def submit_one():
         prompt = rng.integers(0, cfg.vocab_size, (prompt_len,)).astype(np.int32)
-        engine.submit(prompt, max_new_tokens=gen_len)
+        try:
+            engine.submit(prompt, max_new_tokens=gen_len)
+        except QueueFullError:
+            pass    # open-loop load-shed: counted in stats.requests_rejected
 
     completed = []
     rung_trace = []
@@ -195,13 +198,17 @@ def main(argv=None):
     p.add_argument("--arrival-rate", type=float, default=0.5)
     p.add_argument("--burst-every", type=int, default=20)
     p.add_argument("--burst-size", type=int, default=5)
+    p.add_argument("--max-queue", type=int, default=0,
+                   help="reject submits once this many requests wait "
+                        "(0 = unbounded)")
     args = p.parse_args(argv)
     if args.continuous:
         res = run_continuous_serving(
             args.arch, smoke=not args.full, max_slots=args.max_slots,
             prompt_len=args.prompt_len, gen_len=args.gen_len,
             load_steps=args.load_steps, arrival_rate=args.arrival_rate,
-            burst_every=args.burst_every, burst_size=args.burst_size)
+            burst_every=args.burst_every, burst_size=args.burst_size,
+            max_queue=args.max_queue)
         print(f"served {res['requests_completed']} requests: "
               f"{res['sustained_req_per_s']:.2f} req/s, "
               f"p50 {res['p50_latency_s']:.3f}s p99 {res['p99_latency_s']:.3f}s, "

@@ -31,13 +31,15 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.controller import (
-    ControllerConfig, init_controller, controller_update)
+    ControllerConfig, controller_state_as_dict, controller_state_from_dict,
+    init_controller, controller_update)
 from repro.core.schedule import (
     BatchPlan, ConstantSchedule, StagewiseSchedule, bucket_ladder,
     parse_ladder, round_plan)
 from repro.data.pipeline import (
     MarkovTokens, UniformTokens, make_batch, pad_to_bucket)
-from repro.distributed.coordination import enable_persistent_cache, make_coordinator
+from repro.distributed.coordination import (
+    CoordinationError, enable_persistent_cache, make_coordinator)
 from repro.distributed.engine import BucketedEngine
 from repro.distributed.train_step import make_fsdp_norm_step, make_accum_norm_step
 from repro.compat import set_mesh
@@ -46,7 +48,9 @@ from repro.models import build_model
 from repro.optim.adamw import (
     AdamWConfig, init_adamw, init_adamw_flat, warmup_cosine)
 from repro.checkpoint.store import (
-    FLAT_PARAMS_META, flat_params_metadata, save_checkpoint)
+    FLAT_PARAMS_META, flat_params_metadata, latest_step, restore_checkpoint,
+    save_checkpoint)
+from repro.testing.faults import fault_point
 
 
 @dataclass
@@ -105,6 +109,14 @@ class TrainJob:
     eval_every: int = 25
     eval_batches: int = 4
     checkpoint_dir: str = ""
+    # crash-safe training (DESIGN §12): checkpoint_every > 0 writes a
+    # crash-atomic checkpoint (params/opt + controller state + samples
+    # cursor) every N steps; --resume restarts from the newest complete
+    # checkpoint in checkpoint_dir and reproduces the uninterrupted run's
+    # losses BIT-identically (data/eval/LR are pure functions of the
+    # restored step/samples cursors)
+    checkpoint_every: int = 0
+    resume: bool = False
     log_path: str = ""
 
 
@@ -126,8 +138,12 @@ def run_training(job: TrainJob) -> dict:
     # run identity for the file coordinator: a digest of the job config
     # minus per-host fields, so every rank of THIS job (including restarts)
     # shares one coordination namespace while a different job pointed at a
-    # reused --coord-dir can never replay this run's barrier/agreement state
-    per_host = {"coord_rank", "log_path", "checkpoint_dir"}
+    # reused --coord-dir can never replay this run's barrier/agreement state.
+    # `resume` is excluded too: a crashed worker restarted with --resume is
+    # the SAME run and must land in the same namespace — barrier files it
+    # re-crosses while replaying its deterministic prefix already exist
+    # there (the FileCoordinator restart contract)
+    per_host = {"coord_rank", "log_path", "checkpoint_dir", "resume"}
     run_id = "job-%08x" % zlib.crc32(repr(sorted(
         (k, v) for k, v in dataclasses.asdict(job).items()
         if k not in per_host)).encode())
@@ -265,80 +281,48 @@ def run_training(job: TrainJob) -> dict:
                "time": []}
     samples = 0
     step = 0
-    t0 = time.time()
-    log_f = open(job.log_path, "w") if job.log_path else None
-    if log_f:
-        log_f.write("step,samples,global_batch,accum,micro,loss,val_loss,T,var_l1,grad_sqnorm,wall_s\n")
 
-    def seq_len_for(samples_done: int) -> int:
-        if not job.seq_stages:
-            return job.seq_len
-        frac = samples_done / max(total_samples, 1)
-        acc = 0.0
-        for f, sl in job.seq_stages:
-            acc += f
-            if frac < acc:
-                return sl
-        return job.seq_stages[-1][1]
+    # ------------------------------------------------- crash-safe resume --
+    # Restore the FULL loop state: params/opt (in this job's residency —
+    # the like-tree was just built in it), the controller state machine,
+    # and the step/samples cursors.  Everything else the loop consumes —
+    # batches, eval batches, the LR — is a pure function of those cursors,
+    # so the resumed trajectory is bit-identical to the uninterrupted one.
+    resumed_from = None
+    if job.resume:
+        if not job.checkpoint_dir:
+            raise ValueError("--resume requires --checkpoint-dir")
+        ck = latest_step(job.checkpoint_dir)
+        if ck is not None:
+            state, meta = restore_checkpoint(
+                job.checkpoint_dir, ck, {"params": params, "opt": opt_state})
+            saved_job = meta.get("job", {})
+            for f in ("arch", "step_impl", "stats_impl", "params_impl",
+                      "schedule", "seed", "data_seed"):
+                want, got = str(getattr(job, f)), str(saved_job.get(
+                    f, getattr(job, f)))
+                if got != want:
+                    raise ValueError(
+                        f"--resume config mismatch on {f!r}: checkpoint was "
+                        f"saved with {got}, this job has {want}")
+            params = jax.tree.map(jnp.asarray, state["params"])
+            opt_state = jax.tree.map(jnp.asarray, state["opt"])
+            step = ck
+            samples = int(meta.get("samples", 0))
+            if "controller" in meta:
+                ctrl = controller_state_from_dict(meta["controller"])
+            resumed_from = ck
+    history["resumed_from"] = resumed_from
 
-    with set_mesh(mesh):
-        while samples < total_samples and step < job.steps:
-            if schedule is not None:
-                plan = schedule.plan_for(samples, total_samples)
-            else:
-                plan = ctrl.plan
-            seq_len = seq_len_for(samples)
-            batch_np = make_batch(source, step, plan, seq_len, extra_specs)
-            if engine is not None:
-                # no max_global clamp here: the ladder top is built to cover
-                # every schedule plan, including stagewise stages configured
-                # above max_global_batch (the controller clamps its own plans)
-                bucket = engine.bucket_for(plan.global_batch)
-                batch_np = pad_to_bucket(batch_np, plan, bucket)
-                step_fn = engine.get_step(batch_np)
-                engine.observe(plan, bucket)
-                # coordinated: the fleet agrees on ONE rung to warm (each
-                # host's guess could drift); uncoordinated: next_bucket
-                engine.warmup_agreed(bucket, batch_np)
-            batch = jax.tree.map(jnp.asarray, batch_np)
-            lr = warmup_cosine(samples, peak_lr=job.peak_lr, min_lr=job.min_lr,
-                               warmup_steps=warmup_samples,
-                               total_steps=total_samples)
-            if engine is None:
-                step_fn = get_step(plan, batch)
-            params, opt_state, metrics = step_fn(params, opt_state, batch, lr)
+    last_saved = [-1]
 
-            var_l1 = float(metrics["var_l1"])
-            gsq = float(metrics["grad_sqnorm"])
-            loss = float(metrics["loss"])
-            samples += plan.global_batch
-            step += 1
-            if job.schedule == "adaptive":
-                ctrl = controller_update(ctrl_cfg, ctrl, var_l1, gsq)
-
-            val = math.nan
-            if job.eval_every and (step % job.eval_every == 0 or step == job.steps):
-                val = eval_loss(params, step)
-
-            t_stat = var_l1 / (job.eta**2 * gsq + 1e-30)
-            history["step"].append(step)
-            history["loss"].append(loss)
-            history["val_loss"].append(val)
-            history["global_batch"].append(plan.global_batch)
-            history["T"].append(t_stat)
-            history["var_l1"].append(var_l1)
-            history["grad_sqnorm"].append(gsq)
-            history["samples"].append(samples)
-            history["time"].append(time.time() - t0)
-            if log_f:
-                log_f.write(f"{step},{samples},{plan.global_batch},"
-                            f"{plan.accum_steps},{plan.micro_batch},{loss:.4f},"
-                            f"{val:.4f},{t_stat:.1f},{var_l1:.4g},{gsq:.4g},"
-                            f"{time.time()-t0:.1f}\n")
-                log_f.flush()
-
-    if job.checkpoint_dir:
-        meta = {"job": dataclasses.asdict(job)}
+    def save_state():
+        """Crash-atomic full-state checkpoint at the CURRENT step (no-op
+        without a checkpoint_dir, or when this step is already on disk)."""
+        if not job.checkpoint_dir or last_saved[0] == step:
+            return
+        meta = {"job": dataclasses.asdict(job), "samples": samples,
+                "controller": controller_state_as_dict(ctrl)}
         if job.stats_impl == "flat":
             # flat moments are raw bucketed buffers: record the STEP'S OWN
             # layout recipe (bucket size + worker count) — a reader on a
@@ -352,8 +336,110 @@ def run_training(job: TrainJob) -> dict:
             # bit-exactly (checkpoint.store.restore_params[_flat])
             meta[FLAT_PARAMS_META] = flat_params_metadata(layout)
         save_checkpoint(job.checkpoint_dir, step,
-                        {"params": params, "opt": opt_state},
-                        metadata=meta)
+                        {"params": params, "opt": opt_state}, metadata=meta)
+        last_saved[0] = step
+
+    t0 = time.time()
+    log_f = (open(job.log_path, "a" if resumed_from is not None else "w")
+             if job.log_path else None)
+    if log_f and resumed_from is None:
+        log_f.write("step,samples,global_batch,accum,micro,loss,val_loss,T,var_l1,grad_sqnorm,wall_s\n")
+
+    def seq_len_for(samples_done: int) -> int:
+        if not job.seq_stages:
+            return job.seq_len
+        frac = samples_done / max(total_samples, 1)
+        acc = 0.0
+        for f, sl in job.seq_stages:
+            acc += f
+            if frac < acc:
+                return sl
+        return job.seq_stages[-1][1]
+
+    try:
+        with set_mesh(mesh):
+            while samples < total_samples and step < job.steps:
+                # injection site: the Nth call is the Nth step of the RUN,
+                # not of this process — chaos tests key kill rules on it
+                fault_point("train.step", step=step + 1)
+                if schedule is not None:
+                    plan = schedule.plan_for(samples, total_samples)
+                else:
+                    plan = ctrl.plan
+                seq_len = seq_len_for(samples)
+                batch_np = make_batch(source, step, plan, seq_len, extra_specs)
+                if engine is not None:
+                    # no max_global clamp here: the ladder top is built to
+                    # cover every schedule plan, including stagewise stages
+                    # configured above max_global_batch (the controller
+                    # clamps its own plans)
+                    bucket = engine.bucket_for(plan.global_batch)
+                    batch_np = pad_to_bucket(batch_np, plan, bucket)
+                    step_fn = engine.get_step(batch_np)
+                    engine.observe(plan, bucket)
+                    # coordinated: the fleet agrees on ONE rung to warm (each
+                    # host's guess could drift); uncoordinated: next_bucket
+                    engine.warmup_agreed(bucket, batch_np)
+                batch = jax.tree.map(jnp.asarray, batch_np)
+                lr = warmup_cosine(samples, peak_lr=job.peak_lr,
+                                   min_lr=job.min_lr,
+                                   warmup_steps=warmup_samples,
+                                   total_steps=total_samples)
+                if engine is None:
+                    step_fn = get_step(plan, batch)
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     batch, lr)
+
+                var_l1 = float(metrics["var_l1"])
+                gsq = float(metrics["grad_sqnorm"])
+                loss = float(metrics["loss"])
+                samples += plan.global_batch
+                step += 1
+                if job.schedule == "adaptive":
+                    ctrl = controller_update(ctrl_cfg, ctrl, var_l1, gsq)
+
+                val = math.nan
+                if job.eval_every and (step % job.eval_every == 0
+                                       or step == job.steps):
+                    val = eval_loss(params, step)
+
+                t_stat = var_l1 / (job.eta**2 * gsq + 1e-30)
+                history["step"].append(step)
+                history["loss"].append(loss)
+                history["val_loss"].append(val)
+                history["global_batch"].append(plan.global_batch)
+                history["T"].append(t_stat)
+                history["var_l1"].append(var_l1)
+                history["grad_sqnorm"].append(gsq)
+                history["samples"].append(samples)
+                history["time"].append(time.time() - t0)
+                if log_f:
+                    log_f.write(
+                        f"{step},{samples},{plan.global_batch},"
+                        f"{plan.accum_steps},{plan.micro_batch},{loss:.4f},"
+                        f"{val:.4f},{t_stat:.1f},{var_l1:.4g},{gsq:.4g},"
+                        f"{time.time()-t0:.1f}\n")
+                    log_f.flush()
+                # save AFTER the step's metrics land (log line k precedes
+                # checkpoint k: a resumed log never skips a line)
+                if job.checkpoint_every and step % job.checkpoint_every == 0:
+                    save_state()
+    except CoordinationError as e:
+        # a peer rank is dead or never arrived: the fleet cannot make
+        # progress, but THIS rank's state is intact — checkpoint it and
+        # exit cleanly (DESIGN §12) so a restarted fleet resumes from here
+        # instead of from the last periodic save (or from scratch)
+        save_state()
+        history["coordination_failure"] = str(e)
+        if log_f:
+            log_f.close()
+        if engine is not None:
+            engine.drain(raise_errors=False)
+        if coordinator is not None:
+            coordinator.close()
+        raise
+
+    save_state()
     if log_f:
         log_f.close()
     if engine is not None:

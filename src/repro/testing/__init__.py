@@ -1,0 +1,8 @@
+"""Test-support subsystems that ship with the library (not under tests/):
+the deterministic fault-injection harness lives here because its injection
+points are compiled into the production modules (engine, coordination,
+checkpoint store, train loop) and must be importable from any process —
+including the subprocess workers the chaos suite kills."""
+
+from repro.testing.faults import (       # noqa: F401
+    FaultInjector, FaultRule, InjectedFault, fault_point, inject)

@@ -1,11 +1,15 @@
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint.store import (
-    FLAT_PARAMS_META, flat_params_metadata, save_checkpoint,
+    CheckpointError, FLAT_PARAMS_META, flat_params_metadata, save_checkpoint,
     restore_checkpoint, restore_params, restore_params_flat, latest_step)
 from repro.distributed.flatbuf import FlatParams
+from repro.testing.faults import FaultRule, InjectedFault, inject
 
 
 def test_roundtrip(tmp_path):
@@ -93,3 +97,55 @@ def test_tree_checkpoint_restores_into_flat_job(tmp_path):
     assert FLAT_PARAMS_META not in meta
     for a, b in zip(jax.tree.leaves(fp.to_tree()), jax.tree.leaves(tree)):
         assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------- crash atomicity (§12) ----
+
+def test_crash_before_commit_leaves_previous_checkpoint(tmp_path):
+    """A writer dying between temp-write and rename leaves only temp litter:
+    `latest_step` still names the previous complete pair, and the next
+    successful save cleans the litter up."""
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"x": jnp.arange(4.0)})
+    with inject(FaultRule(site="ckpt.save.before_commit")):
+        with pytest.raises(InjectedFault):
+            save_checkpoint(d, 2, {"x": jnp.arange(4.0) + 1})
+    assert latest_step(d) == 1
+    assert any(".tmp" in f for f in os.listdir(d))      # the litter
+    restored, _ = restore_checkpoint(d, 1, {"x": jnp.zeros(4)})
+    np.testing.assert_array_equal(restored["x"], np.arange(4.0))
+    save_checkpoint(d, 3, {"x": jnp.arange(4.0) + 2})
+    assert latest_step(d) == 3
+    assert not any(".tmp" in f for f in os.listdir(d))  # litter cleaned
+
+
+def test_lone_json_is_not_a_checkpoint(tmp_path):
+    """`latest_step` requires the COMPLETE pair: a metadata file whose npz
+    never landed (crash between the two renames) is invisible."""
+    d = str(tmp_path)
+    save_checkpoint(d, 4, {"x": jnp.zeros(2)})
+    (tmp_path / "ckpt_00000009.json").write_text("{}")
+    assert latest_step(d) == 4
+
+
+def test_truncated_npz_raises_typed_error(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 6, {"x": jnp.arange(128.0)})
+    with inject(FaultRule(site="ckpt.saved", action="truncate",
+                          keep_bytes=40)):
+        save_checkpoint(d, 7, {"x": jnp.arange(128.0)})
+    assert latest_step(d) == 7       # pair exists; the tear is inside the npz
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        restore_checkpoint(d, 7, {"x": jnp.zeros(128)})
+    restore_checkpoint(d, 6, {"x": jnp.zeros(128)})     # older pair intact
+
+
+def test_missing_and_mismatched_entries_are_loud(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"x": jnp.zeros(3)})
+    with pytest.raises(CheckpointError, match="does not exist"):
+        restore_checkpoint(d, 99, {"x": jnp.zeros(3)})
+    with pytest.raises(CheckpointError, match="no entry"):
+        restore_checkpoint(d, 1, {"y": jnp.zeros(3)})
+    with pytest.raises(CheckpointError, match="shape"):
+        restore_checkpoint(d, 1, {"x": jnp.zeros(4)})

@@ -399,3 +399,74 @@ def test_coord_none_bit_identical_to_uncoordinated(tmp_path):
         assert e_none[k] == e_solo[k], k
     assert e_none["barriers"] == 0                       # no coordinator
     assert e_solo["desyncs"] == e_solo["coord_downgrades"] == 0
+
+
+# -------------------------------------------------- liveness (§12) ----
+
+def test_barrier_timeout_is_typed_with_missing_ranks(tmp_path):
+    """Both ranks alive (fresh heartbeats), one never arrives: a plain
+    timeout, but TYPED and naming the missing rank id, not just a count."""
+    from repro.distributed.coordination import CoordinationError
+    c0, c1 = _pair(tmp_path, timeout=0.25)
+    with pytest.raises(CoordinationError) as ei:
+        c0.barrier("rung-solo")
+    assert ei.value.missing_ranks == (1,)
+    assert ei.value.dead_ranks == ()            # its heartbeat is fresh
+    assert "missing ranks: [1]" in str(ei.value)
+    assert isinstance(ei.value, TimeoutError)   # pre-liveness contract
+    c0.close(), c1.close()
+
+
+def test_barrier_fails_fast_when_missing_rank_is_dead(tmp_path):
+    """A rank whose heartbeat was seen then went stale is DEAD: the barrier
+    raises immediately with the blame attached instead of burning the full
+    timeout."""
+    from repro.distributed.coordination import CoordinationError
+    d = str(tmp_path / "coord")
+    c1 = FileCoordinator(d, 1, 2, heartbeat_s=0.05, dead_after=0.3)
+    c1.close()                                  # rank 1 "dies": beat stops
+    c0 = FileCoordinator(d, 0, 2, heartbeat_s=0.05, dead_after=0.3,
+                         timeout=60.0)
+    time.sleep(0.45)                            # let the heartbeat go stale
+    t0 = time.monotonic()
+    with pytest.raises(CoordinationError) as ei:
+        c0.barrier("rung-x")
+    assert time.monotonic() - t0 < 10.0         # fail-fast, not 60s
+    assert ei.value.dead_ranks == (1,)
+    assert "dead ranks (stale heartbeat): [1]" in str(ei.value)
+    c0.close()
+
+
+def test_agree_fails_fast_when_leader_is_dead(tmp_path):
+    from repro.distributed.coordination import CoordinationError
+    d = str(tmp_path / "coord")
+    c0 = FileCoordinator(d, 0, 2, heartbeat_s=0.05, dead_after=0.3)
+    c0.close()                                  # leader dies pre-publication
+    c1 = FileCoordinator(d, 1, 2, heartbeat_s=0.05, dead_after=0.3,
+                         timeout=60.0)
+    time.sleep(0.45)
+    t0 = time.monotonic()
+    with pytest.raises(CoordinationError, match="heartbeat is stale") as ei:
+        c1.agree("warmup-3", "4x2")
+    assert time.monotonic() - t0 < 10.0
+    assert ei.value.dead_ranks == (0,)
+    c1.close()
+
+
+def test_live_rank_never_reads_as_dead(tmp_path):
+    """The heartbeat thread keeps a healthy rank fresh well past dead_after;
+    only after it stops does the rank turn stale."""
+    d = str(tmp_path / "coord")
+    c0 = FileCoordinator(d, 0, 2, heartbeat_s=0.05, dead_after=0.25)
+    c1 = FileCoordinator(d, 1, 2, heartbeat_s=0.05, dead_after=0.25)
+    time.sleep(0.5)                    # several dead_after windows
+    assert c0.dead_ranks() == frozenset()
+    c1.close()
+    time.sleep(0.5)
+    assert c0.dead_ranks() == frozenset({1})
+    # a never-seen rank is only MISSING (could still be launching), not dead
+    solo = FileCoordinator(str(tmp_path / "c2"), 0, 3, heartbeat_s=0.05,
+                           dead_after=0.25)
+    time.sleep(0.4)
+    assert solo.dead_ranks() == frozenset()
+    solo.close(), c0.close()

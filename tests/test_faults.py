@@ -1,0 +1,182 @@
+"""Deterministic fault-injection harness (DESIGN §12): rule-window
+semantics, env arming, per-action behavior, and the engine's transient
+warmup-compile retry driven through injected faults."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core.schedule import parse_ladder
+from repro.data.pipeline import MarkovTokens, make_batch
+from repro.distributed.coordination import FileCoordinator
+from repro.distributed.engine import BucketedEngine
+from repro.testing.faults import (
+    FaultInjector, FaultRule, InjectedFault, active, fault_point, inject)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+# ------------------------------------------------------- rule semantics ----
+
+def test_rule_window_fires_exact_invocations():
+    """A rule fires on invocations [at, at+count) of ITS site and nowhere
+    else — the whole determinism contract in one test."""
+    with inject(FaultRule(site="x", at=2, count=2)) as inj:
+        fault_point("x")                       # 1: before the window
+        for n in (2, 3):                       # 2, 3: inside
+            with pytest.raises(InjectedFault, match=f"x\\[{n}\\]"):
+                fault_point("x")
+        fault_point("x")                       # 4: after the window
+        fault_point("y")                       # other sites never fire
+        assert inj.invocations("x") == 4
+        assert inj.invocations("y") == 1
+        assert inj.fired("x") == [("x", 2, "raise"), ("x", 3, "raise")]
+        assert inj.fired("y") == []
+
+
+def test_inject_nests_and_restores():
+    assert active() is None
+    with inject(FaultRule(site="a")) as outer:
+        assert active() is outer
+        with inject(FaultRule(site="b")) as inner:
+            assert active() is inner
+            fault_point("a")                   # outer's rule is NOT armed
+            with pytest.raises(InjectedFault):
+                fault_point("b")
+        assert active() is outer
+    assert active() is None
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError, match="unknown fault action"):
+        FaultRule(site="x", action="explode")
+    with pytest.raises(ValueError, match="at>=1"):
+        FaultRule(site="x", at=0)
+
+
+def test_delay_action_sleeps():
+    with inject(FaultRule(site="slow", action="delay", delay_s=0.08)):
+        t0 = time.monotonic()
+        fault_point("slow")
+        assert time.monotonic() - t0 >= 0.06
+
+
+def test_truncate_action_tears_the_file(tmp_path):
+    p = tmp_path / "blob.bin"
+    p.write_bytes(b"x" * 100)
+    with inject(FaultRule(site="tear", action="truncate", keep_bytes=7)):
+        fault_point("tear", path=str(p))
+    assert p.stat().st_size == 7
+    # a truncate rule at a site that passes no path is a loud setup error
+    with inject(FaultRule(site="tear", action="truncate")):
+        with pytest.raises(ValueError, match="path"):
+            fault_point("tear")
+
+
+def test_from_env_parses_json_list_and_single_dict(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS",
+                       '[{"site": "s", "at": 3, "action": "delay"}]')
+    inj = FaultInjector.from_env()
+    assert inj.rules == (FaultRule(site="s", at=3, action="delay"),)
+    monkeypatch.setenv("REPRO_FAULTS", '{"site": "t"}')
+    assert FaultInjector.from_env().rules == (FaultRule(site="t"),)
+    monkeypatch.setenv("REPRO_FAULTS", "")
+    assert FaultInjector.from_env() is None
+
+
+def test_die_action_sigkills_subprocess(tmp_path):
+    """``die`` is a real SIGKILL (no cleanup, no excepthook) — the process
+    exits with signal 9 exactly at the scheduled invocation."""
+    code = (
+        "from repro.testing.faults import fault_point\n"
+        "for i in range(10):\n"
+        "    print('tick', i + 1, flush=True)\n"
+        "    fault_point('train.step')\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_FAULTS"] = json.dumps(
+        [{"site": "train.step", "at": 3, "action": "die"}])
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=60)
+    assert p.returncode == -9, (p.returncode, p.stderr)
+    assert p.stdout.splitlines()[-1] == "tick 3"
+
+
+# ---------------------------------------- engine warmup-compile retry ----
+
+class _FakeJitted:
+    def lower(self, *a):
+        return self
+
+    def compile(self):
+        return lambda *a: None
+
+
+def _warm_one(coord=None, **engine_kw):
+    """One background warmup of rung 2:2 through the retry path; returns
+    the engine after drain (caller asserts on stats)."""
+    ladder = parse_ladder("2:1,2:2", workers=1)
+    eng = BucketedEngine(lambda bl: _FakeJitted(), ladder, params_like={},
+                         opt_like={}, aot_warmup=True, coordinator=coord,
+                         **engine_kw)
+    src = MarkovTokens(vocab_size=32, seed=0)
+    eng.warmup(ladder[1], make_batch(src, 0, ladder[0], seq_len=4))
+    return eng
+
+
+def test_transient_warmup_failure_retried_to_success(tmp_path):
+    """The acceptance bar: ONE injected compile failure is retried in the
+    background and succeeds — no warmup_failure, no fleet broadcast, and
+    the rung lands warm."""
+    coord = FileCoordinator(str(tmp_path / "c"), 0, 2)
+    observer = FileCoordinator(str(tmp_path / "c"), 1, 2)
+    with inject(FaultRule(site="engine.warmup_compile", at=1, count=1)) as inj:
+        eng = _warm_one(coord=coord, warmup_backoff_s=0.01)
+        eng.drain()                                  # would raise if failed
+    assert eng.stats.warmups == 1
+    assert eng.stats.warmup_retries == 1
+    assert eng.stats.warmup_failures == 0
+    assert inj.invocations("engine.warmup_compile") == 2   # attempt + retry
+    # transient != permanent: nothing was broadcast to the fleet
+    assert observer.poll_failures() == frozenset()
+
+
+def test_permanent_warmup_failure_still_broadcast(tmp_path):
+    """A failure outlasting every retry keeps PR 5 semantics: counted once
+    at consumption, broadcast to the fleet."""
+    coord = FileCoordinator(str(tmp_path / "c"), 0, 2)
+    observer = FileCoordinator(str(tmp_path / "c"), 1, 2)
+    with inject(FaultRule(site="engine.warmup_compile", at=1, count=99)):
+        eng = _warm_one(coord=coord, warmup_retries=2, warmup_backoff_s=0.01)
+        with pytest.raises(RuntimeError, match="warmup compile"):
+            eng.drain()
+    assert eng.stats.warmup_retries == 2             # both retries burned
+    assert eng.stats.warmup_failures == 1
+    assert len(observer.poll_failures()) == 1        # permanent -> broadcast
+
+
+def test_warmup_retry_budget_is_configurable():
+    with inject(FaultRule(site="engine.warmup_compile", at=1, count=99)):
+        eng = _warm_one(warmup_retries=0)            # retries disabled
+        with pytest.raises(RuntimeError, match="warmup compile"):
+            eng.drain()
+    assert eng.stats.warmup_retries == 0
+    assert eng.stats.warmup_failures == 1
+    assert eng.stats.as_dict()["warmup_retries"] == 0
+
+
+def test_foreground_compile_site_reaches_lookup():
+    """`engine.compile` guards the foreground build: an injected raise
+    surfaces to the caller (training would abort — foreground compiles have
+    no retry by design; the step cannot proceed without its executable)."""
+    ladder = parse_ladder("2:1", workers=1)
+    eng = BucketedEngine(lambda bl: (lambda *a: None), ladder)
+    src = MarkovTokens(vocab_size=32, seed=0)
+    batch = make_batch(src, 0, ladder[0], seq_len=4)
+    with inject(FaultRule(site="engine.compile", at=1)):
+        with pytest.raises(InjectedFault):
+            eng.get_step(batch)

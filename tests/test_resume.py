@@ -1,0 +1,235 @@
+"""Crash-safe training (DESIGN §12): periodic checkpoints + `--resume`
+reproduce the uninterrupted run BIT-identically — in-process, across a real
+SIGKILL, in both parameter residencies — and a dead peer turns into a typed
+`CoordinationError` with a checkpoint, not a hang.  The heaviest
+multi-process kill scenarios run in the chaos tier (``REPRO_CHAOS=1``,
+a dedicated CI job)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import latest_step
+from repro.launch.train import TrainJob, run_training
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+chaos = pytest.mark.skipif(os.environ.get("REPRO_CHAOS") != "1",
+                           reason="chaos tier: set REPRO_CHAOS=1")
+
+
+def _job_kw(**over):
+    kw = dict(arch="llama3.2-1b", schedule="adaptive", steps=8,
+              total_samples=100_000, seq_len=16, base_global_batch=4,
+              max_global_batch=8, base_micro_batch=2, max_micro_batch=2,
+              base_accum=2, eta=0.12, step_impl="accum_norm",
+              eval_every=4, eval_batches=2)
+    kw.update(over)
+    return kw
+
+
+def _assert_suffix_identical(resumed: dict, ref: dict, k: int):
+    """The resumed run's history must equal the uninterrupted run's history
+    from step k+1 on — EXACTLY (floats compared by ==, not tolerance)."""
+    assert resumed["resumed_from"] == k
+    assert resumed["loss"] == ref["loss"][k:]
+    assert resumed["global_batch"] == ref["global_batch"][k:]
+    assert resumed["samples"] == ref["samples"][k:]
+    # eval points that fall in the resumed segment match too (NaN-safe)
+    np.testing.assert_array_equal(np.asarray(resumed["val_loss"]),
+                                  np.asarray(ref["val_loss"][k:]))
+
+
+# ------------------------------------------------- in-process resume ----
+
+@pytest.mark.parametrize("impl", ["tree", "flat"])
+def test_resume_bit_identity_both_residencies(tmp_path, impl):
+    """The acceptance bar, in-process: a run stopped at step 4 and resumed
+    to step 8 produces the SAME losses/batches/params as one uninterrupted
+    run — for tree-resident and flat-resident params."""
+    kw = _job_kw(params_impl=impl, stats_impl=impl)
+    ref = run_training(TrainJob(**kw))
+    d = str(tmp_path / "ck")
+    run_training(TrainJob(**{**kw, "steps": 4, "checkpoint_dir": d}))
+    assert latest_step(d) == 4
+    resumed = run_training(TrainJob(**{**kw, "checkpoint_dir": d,
+                                       "resume": True}))
+    _assert_suffix_identical(resumed, ref, 4)
+    for a, b in zip(jax.tree.leaves(resumed["final_params"]),
+                    jax.tree.leaves(ref["final_params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_with_empty_dir_starts_fresh(tmp_path):
+    kw = _job_kw(steps=2, eval_every=0,
+                 checkpoint_dir=str(tmp_path / "empty"), resume=True)
+    h = run_training(TrainJob(**kw))
+    assert h["resumed_from"] is None and len(h["loss"]) == 2
+    assert latest_step(kw["checkpoint_dir"]) == 2      # final save happened
+
+
+def test_resume_requires_checkpoint_dir():
+    with pytest.raises(ValueError, match="checkpoint-dir"):
+        run_training(TrainJob(**_job_kw(resume=True)))
+
+
+def test_resume_config_mismatch_is_loud(tmp_path):
+    d = str(tmp_path / "ck")
+    run_training(TrainJob(**_job_kw(steps=2, eval_every=0,
+                                    checkpoint_dir=d)))
+    with pytest.raises(ValueError, match="config mismatch.*data_seed"):
+        run_training(TrainJob(**_job_kw(checkpoint_dir=d, resume=True,
+                                        data_seed=7)))
+
+
+def test_periodic_checkpoints_written_and_log_appends(tmp_path):
+    d = str(tmp_path / "ck")
+    log = str(tmp_path / "train.csv")
+    kw = _job_kw(steps=6, eval_every=0, checkpoint_dir=d, checkpoint_every=2,
+                 log_path=log)
+    run_training(TrainJob(**{**kw, "steps": 4}))
+    # every multiple of checkpoint_every is on disk (4 is also the final)
+    on_disk = {int(f[5:13]) for f in os.listdir(d) if f.endswith(".npz")}
+    assert on_disk == {2, 4}
+    lines_before = open(log).read().splitlines()
+    run_training(TrainJob(**kw, resume=True))
+    assert latest_step(d) == 6
+    lines_after = open(log).read().splitlines()
+    # appended (header once, no rewrite of the pre-crash rows)
+    assert lines_after[:len(lines_before)] == lines_before
+    assert len(lines_after) == 1 + 6   # header + one row per step
+
+
+# ------------------------------------------------- SIGKILL + resume ----
+
+_TRAIN_SNIPPET = """
+import json, sys
+from repro.launch.train import TrainJob, run_training
+out_path = sys.argv[1]
+h = run_training(TrainJob(**json.loads(sys.argv[2])))
+json.dump({"loss": h["loss"], "global_batch": h["global_batch"],
+           "samples": h["samples"],
+           "val_loss": [v for v in h["val_loss"]],
+           "resumed_from": h["resumed_from"]}, open(out_path, "w"))
+print("DONE")
+"""
+
+
+def _train_subprocess(kw, out_path, faults=None, expect_sigkill=False,
+                      timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("REPRO_FAULTS", None)
+    if faults:
+        env["REPRO_FAULTS"] = json.dumps(faults)
+    p = subprocess.run(
+        [sys.executable, "-c", _TRAIN_SNIPPET, str(out_path), json.dumps(kw)],
+        capture_output=True, text=True, env=env, timeout=timeout)
+    if expect_sigkill:
+        assert p.returncode == -9, (p.returncode, p.stderr)
+        return None
+    assert p.returncode == 0, f"train run failed:\n{p.stdout}\n{p.stderr}"
+    return json.load(open(out_path))
+
+
+def _kill_and_resume(tmp_path, impl):
+    """SIGKILL a run at step 6 (checkpoints every 2 -> last complete is 4),
+    resume it, and demand bit-identity with an uninterrupted reference."""
+    d = str(tmp_path / "ck")
+    kw = _job_kw(params_impl=impl, stats_impl=impl, eval_every=0)
+    ref = _train_subprocess(kw, tmp_path / "ref.json")
+    victim = {**kw, "checkpoint_dir": d, "checkpoint_every": 2}
+    _train_subprocess(victim, tmp_path / "victim.json",
+                      faults=[{"site": "train.step", "at": 6,
+                               "action": "die"}], expect_sigkill=True)
+    assert latest_step(d) == 4      # step-6 work died before any save
+    resumed = _train_subprocess({**victim, "resume": True},
+                                tmp_path / "resumed.json")
+    _assert_suffix_identical(resumed, ref, 4)
+
+
+def test_sigkill_mid_run_resume_bit_identity(tmp_path):
+    _kill_and_resume(tmp_path, "tree")
+
+
+@chaos
+def test_sigkill_mid_run_resume_bit_identity_flat(tmp_path):
+    _kill_and_resume(tmp_path, "flat")
+
+
+def test_sigkill_during_checkpoint_commit_keeps_previous(tmp_path):
+    """A kill BETWEEN temp-write and rename (the torn-save window) leaves
+    the previous checkpoint as latest; resume proceeds from it."""
+    d = str(tmp_path / "ck")
+    kw = _job_kw(steps=6, eval_every=0, checkpoint_dir=d,
+                 checkpoint_every=2)
+    _train_subprocess(kw, tmp_path / "victim.json",
+                      faults=[{"site": "ckpt.save.before_commit", "at": 2,
+                               "action": "die"}], expect_sigkill=True)
+    # save #1 (step 2) committed; save #2 (step 4) died pre-rename
+    assert latest_step(d) == 2
+    resumed = _train_subprocess({**kw, "resume": True},
+                                tmp_path / "resumed.json")
+    assert resumed["resumed_from"] == 2 and len(resumed["loss"]) == 4
+    assert latest_step(d) == 6
+
+
+# --------------------------------------- dead peer: checkpoint + exit ----
+
+_SURVIVOR_SNIPPET = """
+import sys
+from repro.launch.train import TrainJob, run_training
+rank, coord_dir, ckdir = int(sys.argv[1]), sys.argv[2], sys.argv[3]
+job = TrainJob(arch="llama3.2-1b", schedule="stagewise",
+               stages=((0.5, 4), (0.5, 8)), steps=12, total_samples=48,
+               seq_len=16, base_global_batch=4, max_global_batch=8,
+               base_micro_batch=2, max_micro_batch=2, base_accum=2,
+               step_impl="accum_norm", eval_every=0, aot_warmup=True,
+               coord="file", coord_dir=coord_dir, coord_rank=rank,
+               coord_world=2, coord_timeout=60.0,
+               checkpoint_dir=(ckdir if rank == 0 else ""))
+run_training(job)
+print("DONE")
+"""
+
+
+@chaos
+def test_dead_rank_surviving_rank_checkpoints_and_exits(tmp_path):
+    """The acceptance bar for liveness: rank 1 is SIGKILLed at step 3; when
+    rank 0 next needs the fleet (the rung-entry barrier of the stagewise
+    4->8 increase at step 7) it must fail FAST with a `CoordinationError`
+    naming rank 1 as dead — after writing a checkpoint of its intact state
+    — instead of hanging out the full timeout."""
+    coord = str(tmp_path / "coord")
+    ck = str(tmp_path / "ck")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("REPRO_FAULTS", None)
+    env["REPRO_COORD_HEARTBEAT_S"] = "0.1"
+    env["REPRO_COORD_DEAD_AFTER_S"] = "2.0"
+    env_dead = dict(env)
+    env_dead["REPRO_FAULTS"] = json.dumps(
+        [{"site": "train.step", "at": 3, "action": "die"}])
+    procs = [
+        subprocess.Popen([sys.executable, "-c", _SURVIVOR_SNIPPET,
+                          "0", coord, ck], stdout=subprocess.PIPE,
+                         stderr=subprocess.PIPE, text=True, env=env),
+        subprocess.Popen([sys.executable, "-c", _SURVIVOR_SNIPPET,
+                          "1", coord, ck], stdout=subprocess.PIPE,
+                         stderr=subprocess.PIPE, text=True, env=env_dead),
+    ]
+    out0, err0 = procs[0].communicate(timeout=420)
+    out1, err1 = procs[1].communicate(timeout=60)
+    assert procs[1].returncode == -9, (procs[1].returncode, err1)
+    # the survivor exited with the TYPED error naming the dead rank...
+    assert procs[0].returncode not in (0, None), (out0, err0)
+    assert "CoordinationError" in err0, err0
+    assert "dead ranks" in err0 and "[1]" in err0, err0
+    # ...after checkpointing every step it completed alone (1..6: the
+    # barrier it died on is the step-7 rung entry)
+    assert latest_step(ck) == 6, os.listdir(ck)

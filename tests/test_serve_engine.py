@@ -256,3 +256,46 @@ def test_engine_two_device_decode_sharding():
     # the resident pool is genuinely sharded over the data axis
     leaf = jax.tree.leaves(eng._kv)[0]
     assert len(leaf.sharding.device_set) == 2
+
+
+# ----------------------------------------------- admission control ----
+
+def test_max_queue_rejects_with_typed_error_and_counts():
+    """Overload is load-shed at submit: the max_queue+1'th waiting request
+    gets a typed `QueueFullError` (never enqueued, counted in
+    `requests_rejected`); draining frees capacity again."""
+    from repro.distributed.serve_engine import QueueFullError
+    cfg, model, params, eng = _engine(max_slots=2, max_queue=3)
+    prompt = np.array([1, 2], np.int32)
+    for _ in range(3):
+        eng.submit(prompt, max_new_tokens=2)
+    with pytest.raises(QueueFullError) as ei:
+        eng.submit(prompt, max_new_tokens=2)
+    assert ei.value.queued == 3 and ei.value.max_queue == 3
+    assert "max_queue 3" in str(ei.value)
+    assert eng.stats.requests_rejected == 1
+    assert eng.stats.requests_submitted == 3       # the reject never counted
+    assert len(eng.queue) == 3                     # ...and never enqueued
+    # malformed requests are ValueError, not rejection accounting
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.array([], np.int32), max_new_tokens=1)
+    assert eng.stats.requests_rejected == 1
+    eng.run_until_drained()
+    eng.submit(prompt, max_new_tokens=2)           # capacity is back
+    done = eng.run_until_drained()
+    assert eng.stats.requests_completed == 4 and len(done) == 1
+    assert eng.stats.as_dict()["requests_rejected"] == 1
+
+
+def test_max_queue_zero_is_unbounded_and_negative_rejected():
+    from repro.distributed.serve_engine import ServeEngine
+    cfg, model, params, eng = _engine(max_slots=2)     # default: unbounded
+    assert eng.max_queue == 0
+    prompt = np.array([1], np.int32)
+    for _ in range(50):
+        eng.submit(prompt, max_new_tokens=1)
+    assert eng.stats.requests_rejected == 0
+    mesh = make_host_mesh(1, 1)
+    with pytest.raises(ValueError, match="max_queue"):
+        ServeEngine(model, params, mesh, max_slots=2, cache_len=16,
+                    max_queue=-1)
