@@ -72,6 +72,7 @@ def _train_scheme(arch, scheme, steps, *, eta=0.2, step_impl="accum_norm",
         b = int(scheme.split(":")[1])
         kw.update(base_global_batch=b, max_global_batch=b)
         job = TrainJob(schedule="constant", **kw)
+    # repro: allow(unfenced-timing) — whole-run span; run_training/serving materializes host floats every step, so the wall clock cannot run ahead of device work
     t0 = time.time()
     hist = run_training(job)
     s = summarize(hist)
@@ -174,6 +175,7 @@ def bench_engine_cache(steps):
                        base_micro_batch=2, max_micro_batch=4, base_accum=2,
                        eta=0.12, step_impl="accum_norm", eval_every=0,
                        bucket_ladder=ladder, aot_warmup=warm)
+        # repro: allow(unfenced-timing) — whole-run span; run_training/serving materializes host floats every step, so the wall clock cannot run ahead of device work
         t0 = time.time()
         h = run_training(job)
         s = summarize(h)
@@ -536,6 +538,7 @@ def bench_serve(steps):
                 load_steps=30 if tiny else max(steps, 60),
                 arrival_rate=0.5, burst_every=10 if tiny else 20,
                 burst_size=5, aot_warmup=True)
+    # repro: allow(unfenced-timing) — whole-run span; run_training/serving materializes host floats every step, so the wall clock cannot run ahead of device work
     t0 = time.time()
     res = run_continuous_serving("llama3.2-1b", smoke=True, **load)
     us = (time.time() - t0) / max(res["engine"]["steps"], 1) * 1e6

@@ -1,0 +1,38 @@
+"""repro.analysis — static invariant checker + determinism/perf lint
+(DESIGN §13).
+
+Two layers, both purely static:
+
+* **jaxpr layer** (`jaxpr_check`, `invariants`): trace — never execute —
+  every step variant in the stats×params residency matrix and assert the
+  step-graph invariants: exact pack/unflatten/adjoint marker-eqn counts,
+  donation actually aliased in the lowered HLO, bucket shardings matching
+  `sharding.flat_buffer_specs`, no host callbacks in the hot path, and
+  off-ladder batch shapes rejected before anything traces.
+* **lint layer** (`lint`): AST rules over the repo's own source encoding
+  its regression history (hash-seeded cache keys, wall-clock in traced
+  code, bare ``interpret=True``, set-order iteration, unfenced benchmark
+  timing, non-atomic durable writes), with inline
+  ``# repro: allow(<rule>) — <reason>`` waivers.
+
+CLI: ``python -m repro.analysis [--strict] [--json]`` runs both and emits
+a machine-readable report; CI gates every PR on zero unwaived findings.
+"""
+
+from repro.analysis.findings import Finding, active, render_report, report_dict
+from repro.analysis.invariants import (
+    EXPECTED_LAYOUT_COUNTS, LayoutCounts, build_variants,
+    check_ladder_rejection, check_variant, run_invariant_checks)
+from repro.analysis.jaxpr_check import (
+    count_layout_ops, donation_effective, find_host_eqns, in_specs,
+    iter_eqns, main_arg_attrs, top_pjit_params, trace)
+from repro.analysis.lint import lint_file, register_rule, rules, run_lint
+
+__all__ = [
+    "EXPECTED_LAYOUT_COUNTS", "Finding", "LayoutCounts", "active",
+    "build_variants", "check_ladder_rejection", "check_variant",
+    "count_layout_ops", "donation_effective", "find_host_eqns", "in_specs",
+    "iter_eqns", "lint_file", "main_arg_attrs", "register_rule",
+    "render_report", "report_dict", "rules", "run_invariant_checks",
+    "run_lint", "top_pjit_params", "trace",
+]

@@ -1,0 +1,57 @@
+"""CLI for the static analysis gate: ``python -m repro.analysis``.
+
+Runs both layers (AST lint sweep + trace-only step-matrix invariant check)
+and prints a report; ``--strict`` exits 1 on any unwaived finding (the CI
+static-analysis job), ``--json`` emits the machine-readable report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr-level invariant checker + determinism/perf lint")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unwaived finding (the CI gate)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable JSON report")
+    ap.add_argument("--root", default=None,
+                    help="repo root to lint (default: auto from this file)")
+    ap.add_argument("--skip-lint", action="store_true",
+                    help="run only the jaxpr invariant matrix")
+    ap.add_argument("--skip-jaxpr", action="store_true",
+                    help="run only the AST lint sweep")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.findings import active, render_report
+    from repro.analysis.lint import run_lint
+
+    root = pathlib.Path(args.root) if args.root else \
+        pathlib.Path(__file__).resolve().parents[3]
+    findings, checked = [], {}
+    if not args.skip_lint:
+        lint = run_lint(root)
+        findings.extend(lint)
+        checked["lint_root"] = str(root)
+        checked["lint_files"] = sum(
+            1 for sub in ("src", "benchmarks") if (root / sub).exists()
+            for _ in (root / sub).rglob("*.py"))
+    if not args.skip_jaxpr:
+        from repro.analysis.invariants import run_invariant_checks
+        from repro.kernels.ops import flat_dispatch_info
+        jx, jx_checked = run_invariant_checks()
+        findings.extend(jx)
+        checked.update(jx_checked)
+        checked["dispatch"] = flat_dispatch_info()
+
+    print(render_report(findings, checked=checked, as_json=args.json))
+    return 1 if (args.strict and active(findings)) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,15 @@ import math
 from dataclasses import dataclass, replace
 
 
+class LadderShapeError(ValueError):
+    """A batch's leading (accum_steps, per-step batch) dims match no ladder
+    rung.  Raised by the bucketed engine BEFORE keying the compiled-step
+    cache: an off-ladder shape would otherwise trace a fresh executable
+    that no warmup covered and no other step will ever hit — the silent
+    recompile class the ladder exists to prevent.  Callers must quantize
+    through `quantize_to_ladder` + `data.pipeline.pad_to_bucket` first."""
+
+
 @dataclass(frozen=True)
 class BatchPlan:
     """A concrete, launchable batch configuration for one step."""

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import set_mesh
-from repro.core.schedule import BatchPlan, quantize_to_ladder
+from repro.core.schedule import BatchPlan, LadderShapeError, quantize_to_ladder
 from repro.distributed.coordination import disk_cache_hits, enable_persistent_cache
 from repro.testing.faults import fault_point
 
@@ -417,10 +417,49 @@ class BucketedEngine(RungCache):
                 "the step compiled for the next")
         return fn
 
+    def trace_step(self, batch_like):
+        """Trace-only jaxpr of the step at `batch_like`'s signature — the
+        `repro.analysis` entry point.  Never executes, never compiles, and
+        never touches the cache or stats: the closed jaxpr of the FULL
+        jitted step (pjit eqn included, so marker eqns, shardings, and
+        donation flags are all visible to the static checker).  Off-ladder
+        shapes raise `LadderShapeError` exactly as `get_step` would."""
+        if self._params_like is None or self._opt_like is None:
+            raise ValueError(
+                "trace_step needs params_like/opt_like (the full abstract "
+                "step signature) — construct the engine with both")
+        self.check_on_ladder(batch_like)
+        fn = self._build(_sds(batch_like))
+        with self._mesh_ctx():
+            return jax.make_jaxpr(fn)(
+                self._params_like, self._opt_like, _sds(batch_like),
+                jax.ShapeDtypeStruct((), jnp.float32))
+
+    def check_on_ladder(self, batch_like):
+        """Reject a batch whose leading (M, B) dims match no ladder rung —
+        BEFORE the cache is keyed or anything traces, so an off-ladder
+        shape costs zero fresh lowerings instead of a silent one-off
+        compile.  Leaves with fewer than two dims (scalars, per-step
+        side inputs) carry no rung identity and are skipped."""
+        rungs = sorted({(p.accum_steps, p.workers * p.micro_batch)
+                        for p in self.ladder})
+        for name in sorted(batch_like):
+            v = batch_like[name]
+            if len(getattr(v, "shape", ())) < 2:
+                continue
+            lead = tuple(v.shape[:2])
+            if lead not in rungs:
+                raise LadderShapeError(
+                    f"batch leaf {name!r} has leading (M, B) dims {lead}, "
+                    f"matching no ladder rung {rungs}; quantize the plan "
+                    f"with bucket_for() and pad with pad_to_bucket() before "
+                    f"stepping")
+
     def get_step(self, batch):
         """The compiled step for this (padded) batch's signature; traces at
         most once per signature across the run, even with concurrent
-        callers (`RungCache.lookup`).
+        callers (`RungCache.lookup`).  Off-ladder shapes are rejected up
+        front with `LadderShapeError` (zero fresh lowerings).
 
         With a coordinator, stepping into a DIFFERENT signature than the
         last step is a rung transition: remote warmup failures are polled
@@ -428,6 +467,7 @@ class BucketedEngine(RungCache):
         — the coherent downgrade to the synchronous path) and the rung-entry
         barrier holds this host until the whole fleet is ready to enter the
         new executable together."""
+        self.check_on_ladder(batch)
         key = _batch_key(batch)
         if self._coord is not None and key != self._entered_key:
             self._enter_rung(key)
@@ -565,4 +605,4 @@ class BucketedEngine(RungCache):
             self._refresh_disk_hits()
 
 
-__all__ = ["BucketedEngine", "EngineStats", "RungCache"]
+__all__ = ["BucketedEngine", "EngineStats", "LadderShapeError", "RungCache"]

@@ -36,9 +36,14 @@ same slots into f32 buffers; `flatten` only requires each *bucket's* leaves
 to agree on the dtype of the tree actually being flattened.
 
 Packing is the flat path's per-step entry cost, so it is instrumented:
-`count_packs()` records every `flatten` call made while tracing, letting
-tests assert the mean gradient is packed exactly ONCE per step (the
-flat-tail double-pack regression guard).
+every layout entry point binds a zero-cost marker primitive
+(`layout_marker_p`, kind = "pack" / "unflatten" / "adjoint") on its
+buffers, so the events survive into the jaxpr — visible *inside* jit,
+scan, shard_map, and custom_vjp — where `repro.analysis.jaxpr_check`
+counts them.  Tracing one flat train step must show the mean gradient
+packed exactly ONCE (the flat-tail double-pack regression guard).
+`count_packs()` is the deprecated Python-call predecessor: it only sees
+calls made at the Python level of the trace, not what jit retraces.
 """
 
 from __future__ import annotations
@@ -46,10 +51,13 @@ from __future__ import annotations
 import contextlib
 import math
 import threading
+import warnings
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+from jax.extend.core import Primitive
+from jax.interpreters import mlir
 
 # ~4 MiB of f32 per bucket on TPU: big enough that per-launch overhead
 # vanishes, small enough for VMEM-friendly grids.
@@ -89,15 +97,63 @@ _PACK_TRACE = _PackTrace()
 
 @contextlib.contextmanager
 def count_packs():
-    """Record every `FlatLayout.flatten` call (a trace-time event) made in
-    this thread while the context is open; yields the list of per-call leaf
-    counts.  Tracing one flat train step must show the mean gradient packed
-    exactly once — the op-count regression hook for the double-pack bug."""
+    """DEPRECATED Python-call pack counter (one-release transition alias).
+
+    Records every `FlatLayout.flatten` call made in this thread while the
+    context is open; yields the list of per-call leaf counts.  Being a
+    host-side hook it cannot see inside an already-jitted callable — use
+    `repro.analysis.count_layout_ops`, which counts the `layout_marker_p`
+    eqns in the traced jaxpr instead (the same events, but visible through
+    jit / scan / shard_map boundaries)."""
+    warnings.warn(
+        "count_packs() is deprecated and will be removed next release; "
+        "use repro.analysis.count_layout_ops (jaxpr-eqn counting) instead",
+        DeprecationWarning, stacklevel=3)
     prev, _PACK_TRACE.active = _PACK_TRACE.active, []
     try:
         yield _PACK_TRACE.active
     finally:
         _PACK_TRACE.active = prev
+
+
+# ------------------------------------------------ layout marker primitive ----
+
+# Identity primitive stamped on the buffer lists at every layout entry point
+# so the *event* ("this step packs a tree here") survives into the jaxpr as a
+# countable equation.  It lowers to nothing (the MLIR rule returns its
+# operands), executes as identity when called with concrete arrays, and
+# carries (kind, nleaves) as static eqn params for `repro.analysis`:
+#
+#   kind="pack"      — `flatten`: a materialized pytree entered the layout
+#   kind="unflatten" — `unflatten` / `unflatten_for_grad` primal: buffers
+#                      were sliced back out into a pytree view
+#   kind="adjoint"   — the backward-pass pack (`unflatten_for_grad`'s VJP or
+#                      the manual `pack_cotangents` transpose): NOT a
+#                      host-level re-entry, accounted separately
+layout_marker_p = Primitive("repro_layout_marker")
+layout_marker_p.multiple_results = True
+layout_marker_p.def_impl(lambda *bufs, kind, nleaves: list(bufs))
+layout_marker_p.def_abstract_eval(lambda *bufs, kind, nleaves: list(bufs))
+mlir.register_lowering(
+    layout_marker_p, lambda ctx, *bufs, kind, nleaves: list(bufs))
+
+# Identity is trivially linear and batchable — register both so the marker
+# is transparent to any transform a caller wraps around the layout (vmapped
+# per-sample stats, vjp through a plain `unflatten`).
+jax.interpreters.ad.deflinear2(
+    layout_marker_p, lambda cts, *bufs, kind, nleaves: list(cts))
+jax.interpreters.batching.primitive_batchers[layout_marker_p] = (
+    lambda args, dims, *, kind, nleaves:
+        (layout_marker_p.bind(*args, kind=kind, nleaves=nleaves), list(dims)))
+
+
+def _mark(buffers, kind: str, nleaves: int):
+    """Bind the marker on a buffer list (identity).  Zero-buffer layouts
+    (empty trees) have no operands to thread the eqn through — and nothing
+    worth counting — so they are left unmarked."""
+    if not buffers:
+        return buffers
+    return layout_marker_p.bind(*buffers, kind=kind, nleaves=nleaves)
 
 
 class FlatLayout:
@@ -199,7 +255,7 @@ class FlatLayout:
                 f"tree has {len(leaves)} leaves, layout expects {self.num_leaves}")
         if _PACK_TRACE.active is not None:
             _PACK_TRACE.active.append(self.num_leaves)
-        return self._pack(leaves)
+        return _mark(self._pack(leaves), "pack", self.num_leaves)
 
     def _pack(self, leaves):
         """Core packing (ravel + per-bucket concat + zero pad), shared by
@@ -236,6 +292,7 @@ class FlatLayout:
             if buf.size != size:
                 raise ValueError(
                     f"buffer {bi} has {buf.size} elements, layout expects {size}")
+        buffers = _mark(list(buffers), "unflatten", self.num_leaves)
         leaves = [
             buffers[s.buffer_index][s.offset:s.offset + s.size].reshape(s.shape)
             for s in self.slots]
@@ -269,7 +326,8 @@ class FlatLayout:
                 return self.unflatten(list(bufs)), None
 
             def bwd(_, ct):
-                return (tuple(self._pack(jax.tree.leaves(ct))),)
+                bufs = self._pack(jax.tree.leaves(ct))
+                return (tuple(_mark(bufs, "adjoint", self.num_leaves)),)
 
             unflat.defvjp(fwd, bwd)
             self._unflat_grad = unflat
@@ -292,7 +350,7 @@ class FlatLayout:
             raise ValueError(
                 f"cotangent tree has {len(leaves)} leaves, layout expects "
                 f"{self.num_leaves}")
-        return self._pack(leaves)
+        return _mark(self._pack(leaves), "adjoint", self.num_leaves)
 
     # --------------------------------------------------------- helpers ----
 
@@ -346,5 +404,5 @@ class FlatParams:
 
 
 __all__ = ["FlatLayout", "FlatParams", "Slot", "flatten_tree", "count_packs",
-           "default_bucket_bytes", "DEFAULT_BUCKET_BYTES",
+           "layout_marker_p", "default_bucket_bytes", "DEFAULT_BUCKET_BYTES",
            "CPU_BUCKET_BYTES"]

@@ -28,9 +28,9 @@ Two residency switches (both default 'tree'):
   path's exact arithmetic, and transposes the result through the explicit
   pad-slice adjoint (`layout.pack_cotangents`, the linear transpose of
   `unflatten`) so gradients are *born flat* and the steady-state step
-  performs ZERO `flatten` packs (`count_packs()` == 0 with
-  stats_impl='flat'; the tree oracle stays available for the differential
-  equivalence suite).  `unflatten_for_grad` is the custom-vjp form of the
+  graph carries ZERO pack eqns (asserted by the DESIGN §13 jaxpr counter,
+  `repro.analysis.count_layout_ops`, with stats_impl='flat'; the tree
+  oracle stays available for the differential equivalence suite).  `unflatten_for_grad` is the custom-vjp form of the
   same adjoint, used where a single `jax.grad` spans the whole update
   (local-SGD) and by the adjoint microbenchmarks/property tests.
 """

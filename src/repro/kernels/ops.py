@@ -124,6 +124,20 @@ def adamw_flat(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, c1, c2,
                                c2=c2, clip_scale=clip_scale)
 
 
+def flat_dispatch_info() -> dict:
+    """Which implementation the DESIGN §9 flat hot-path tail dispatches to
+    on this process's backend.  Recorded in the `repro.analysis` report's
+    `checked` section: a clean static-analysis run thereby documents WHICH
+    backend's step graphs it certified (the compiled-Pallas TPU tail and
+    the fused-jnp CPU tail lower different equations)."""
+    return {
+        "backend": jax.default_backend(),
+        "flat_tail": "pallas-compiled" if _backend_is_tpu() else
+                     "jnp-reference",
+        "pallas_interpret_default": bool(_default_interpret()),
+    }
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
 def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool | None = None):
     ip = _default_interpret() if interpret is None else interpret

@@ -123,6 +123,7 @@ class FaultInjector:
                 self._log.append((site, n, r.action))
         for r in hits:      # side effects OUTSIDE the lock
             if r.action == "delay":
+                # repro: allow(wallclock-traced) — the delay fault's ACTION is a wall-clock sleep; determinism lives in the rule schedule (site hit counts), not the wait itself
                 time.sleep(r.delay_s)
             elif r.action == "die":
                 # a real unhandled death (no atexit, no finally blocks) —

@@ -1,0 +1,21 @@
+"""Fixture: unfenced-timing violation (the PR 6 dispatch-timing leak)."""
+
+import time
+
+
+def leaky_span(step, args):
+    t0 = time.perf_counter()  # VIOLATION unfenced-timing (first read)
+    out = step(*args)
+    t1 = time.perf_counter()
+    return out, t1 - t0
+
+
+def fenced_span(step, args, jax):
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(step(*args))
+    t1 = time.perf_counter()
+    return out, t1 - t0
+
+
+def single_read_timestamp():
+    return time.time()  # clean: one read is a timestamp, not a span

@@ -1,0 +1,21 @@
+"""Fixture: nonatomic-write violations (torn checkpoint class, DESIGN §12)."""
+
+import os
+
+
+def rename_commit(tmp, final):
+    os.rename(tmp, final)  # VIOLATION nonatomic-write (os.rename)
+
+
+def in_place_write(path, payload):
+    with open(path, "w") as f:  # VIOLATION nonatomic-write (in-place)
+        f.write(payload)
+
+
+def atomic_write(path, payload):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:  # clean: fsync + os.replace in this function
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)

@@ -1,0 +1,25 @@
+"""Fixture: hash-seed violations (the PR 5 per-host desync class)."""
+
+
+def seeded_key(name):
+    # a hash()-seeded cache key is PYTHONHASHSEED-randomized per process,
+    # so hosts disagree on which entry they share
+    return hash(name) % 1024  # VIOLATION hash-seed
+
+
+def object_key(obj):
+    return id(obj)  # VIOLATION hash-seed
+
+
+def waived_key(name):
+    # repro: allow(hash-seed) — fixture exercising waiver suppression
+    return hash(name)  # WAIVED hash-seed
+
+
+class Wrapped:
+    def __init__(self, inner):
+        self.inner = inner
+
+    def __hash__(self):
+        # exempt: delegating to hash() inside __hash__ IS the protocol
+        return hash(self.inner)

@@ -1,0 +1,14 @@
+"""Fixture: set-iter-order violations (PYTHONHASHSEED-dependent order)."""
+
+
+def loop_over_literal(out):
+    for name in {"wq", "wk", "wv"}:  # VIOLATION set-iter-order
+        out.append(name)
+
+
+def comp_over_call(names):
+    return [n.upper() for n in set(names)]  # VIOLATION set-iter-order
+
+
+def sorted_is_clean(names):
+    return [n for n in sorted(set(names))]  # clean

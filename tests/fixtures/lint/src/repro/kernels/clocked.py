@@ -1,0 +1,13 @@
+"""Fixture: wallclock-traced violations (clock reads in traced-code scope)."""
+
+import time
+
+
+def traced_span(x):
+    t0 = time.monotonic()  # VIOLATION wallclock-traced
+    return x * 2, t0
+
+
+def waived_span(x):
+    t0 = time.perf_counter()  # repro: allow(wallclock-traced) — fixture
+    return x * 2, t0

@@ -1,0 +1,9 @@
+"""Fixture: bare-interpret violation (Pallas pinned to host interpret)."""
+
+
+def launch(kernel, x):
+    return kernel(x, interpret=True)  # VIOLATION bare-interpret
+
+
+def routed(kernel, x, resolve_interpret):
+    return kernel(x, interpret=resolve_interpret(None))  # clean

@@ -389,10 +389,18 @@ def test_flat_tail_op_count_scales_with_buckets_not_leaves():
 ])
 def test_step_pack_count(step_impl, stats_impl, params_impl, expected):
     """THE pack-count regression guard: tracing one step must show exactly
-    the packs its residency combination requires — 3/2 for the flat-stats
-    path (mean gradient packed exactly once), and ZERO for the
+    the pack eqns its residency combination requires — 3/2 for the
+    flat-stats path (mean gradient packed exactly once), and ZERO for the
     flat-resident steady state (so neither the PR 3 double-pack bug class
-    nor a regression to re-packing born-flat gradients can recur)."""
+    nor a regression to re-packing born-flat gradients can recur).
+
+    Counted from the traced jaxpr's `repro_layout_marker` eqns
+    (`repro.analysis.count_layout_ops`) — unlike the deprecated
+    `count_packs()` Python-call proxy, the eqn count holds THROUGH a jit
+    boundary, so the same assertion also covers the jitted step (and the
+    full stats×params×local-SGD matrix, including the unflatten/adjoint
+    counts, is frozen in `analysis.invariants.EXPECTED_LAYOUT_COUNTS`)."""
+    from repro.analysis import count_layout_ops
     from repro.distributed.train_step import (
         make_fsdp_norm_step, make_accum_norm_step)
     model, mesh, batch, set_mesh = _tiny_step_setup()
@@ -401,20 +409,51 @@ def test_step_pack_count(step_impl, stats_impl, params_impl, expected):
             else make_accum_norm_step)
     params = model.init(jax.random.PRNGKey(0))
     wrap, _, _ = make(model, AdamWConfig(), mesh, stats_impl=stats_impl,
-                      params_impl=params_impl, params_like=params, jit=False)
+                      params_impl=params_impl, params_like=params)
     opt = (init_adamw_flat(params, layout=wrap.flat_layout)
            if stats_impl == "flat" else init_adamw(params))
     if params_impl == "flat":
         # entering residency packs once, OUTSIDE the step — host-side cost,
         # paid once per run, not per step
         params = tuple(wrap.flat_layout.flatten(params))
-    fn = wrap(sds)
+    fn = wrap(sds)                       # the real JITTED step
     with set_mesh(mesh):
+        ops_seen = count_layout_ops(fn, params, opt, batch, jnp.float32(1e-3))
+    assert len(ops_seen["pack"]) == expected, (
+        f"{step_impl}/{stats_impl}/{params_impl}: {len(ops_seen['pack'])} "
+        f"pack eqns per step (expected {expected}): {ops_seen}")
+
+
+def test_count_packs_deprecated_alias_still_counts():
+    """One-release transition: `count_packs()` still records host-level
+    flatten calls but warns DeprecationWarning pointing at the jaxpr
+    counter."""
+    import warnings
+    layout = FlatLayout.from_tree({"a": jnp.zeros((4,)), "b": jnp.zeros((2,))})
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
         with count_packs() as packs:
-            jax.eval_shape(fn, params, opt, batch, jnp.float32(1e-3))
-    assert len(packs) == expected, (
-        f"{step_impl}/{stats_impl}/{params_impl}: {len(packs)} flatten "
-        f"calls per step (expected {expected})")
+            layout.flatten({"a": jnp.zeros((4,)), "b": jnp.zeros((2,))})
+    assert packs == [2]
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_layout_markers_visible_inside_jit():
+    """The reason the proxy was replaced: pack/unflatten events inside an
+    already-jitted callable are invisible to the Python-call counter but
+    present as marker eqns in the traced jaxpr."""
+    from repro.analysis import count_layout_ops
+    tree = {"a": jnp.ones((5,)), "b": jnp.ones((3, 2))}
+    layout = FlatLayout.from_tree(tree)
+    jitted = jax.jit(lambda t: layout.unflatten(layout.flatten(t)))
+    got = count_layout_ops(jitted, tree)
+    assert len(got["pack"]) == 1 and len(got["unflatten"]) == 1
+    # the adjoint pack of a flat-resident gradient is its own kind
+    bufs = tuple(layout.flatten(tree))
+    grad_fn = jax.grad(lambda bs: sum(
+        jnp.sum(x) for x in jax.tree.leaves(layout.unflatten_for_grad(bs))))
+    got = count_layout_ops(jax.jit(grad_fn), bufs)
+    assert len(got["adjoint"]) == 1 and len(got["pack"]) == 0
 
 
 def test_flat_moments_sharded_over_data_axes(subproc):

@@ -77,7 +77,7 @@ def test_local_sgd_flat_resident_matches_tree():
     from repro.models import build_model
     from repro.launch.mesh import make_host_mesh
     from repro.distributed.local_step import make_local_sgd_step
-    from repro.distributed.flatbuf import count_packs
+    from repro.analysis import count_layout_ops
     from repro.optim.adamw import AdamWConfig, init_adamw, init_adamw_flat
 
     from repro.data.pipeline import MarkovTokens, make_batch
@@ -105,10 +105,15 @@ def test_local_sgd_flat_resident_matches_tree():
         if params_impl == "flat":
             params = tuple(layout.flatten(params))
         with set_mesh(mesh):
-            with count_packs() as packs:
-                p2, _, m = wrap(sds)(params, opt, batch, jnp.float32(5e-3))
+            if params_impl == "flat":
+                # jaxpr-eqn count: zero pack eqns in the traced flat round
+                ops_seen = count_layout_ops(
+                    wrap(sds), params, opt, batch, jnp.float32(5e-3))
+                assert not ops_seen["pack"], (
+                    f"{len(ops_seen['pack'])} pack eqns in flat-resident "
+                    f"round: {ops_seen}")
+            p2, _, m = wrap(sds)(params, opt, batch, jnp.float32(5e-3))
         if params_impl == "flat":
-            assert len(packs) == 0, f"{len(packs)} packs in flat-resident round"
             p2 = layout.unflatten(list(p2))
         res[params_impl] = (p2, m)
     for k in ("loss", "var_l1", "grad_sqnorm"):

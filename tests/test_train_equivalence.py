@@ -96,6 +96,23 @@ def test_differential_oracle_all_residency_combos(step_impl):
             oracle, cand, f"{step_impl}/{stats_impl}/{params_impl}")
 
 
+@pytest.mark.parametrize("step_impl", ["fsdp_norm", "accum_norm"])
+def test_traced_steps_match_frozen_layout_catalog(step_impl):
+    """The equivalence matrix above proves the residency combos compute the
+    same numbers; this proves they compute them with the FROZEN layout-op
+    budget — the traced jaxpr of every combo carries exactly the
+    pack/unflatten/adjoint eqn counts in
+    `repro.analysis.EXPECTED_LAYOUT_COUNTS` (trace-only, nothing executes;
+    this replaces the old `count_packs()` proxy assertions)."""
+    from repro.analysis import run_invariant_checks
+    combos = [(step_impl, s, p) for s in ("tree", "flat")
+              for p in ("tree", "flat")]
+    findings, checked = run_invariant_checks(combos=combos)
+    active = [f for f in findings if not f.waived]
+    assert not active, "\n".join(f.render() for f in active)
+    assert len(checked["variants"]) == 4
+
+
 @pytest.mark.skipif(len(jax.devices()) < 2,
                     reason="needs >= 2 devices (CI multi-device job)")
 @pytest.mark.parametrize("step_impl", ["fsdp_norm", "accum_norm"])
