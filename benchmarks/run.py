@@ -661,11 +661,61 @@ def bench_norm_test_knobs(steps):
              final_bsz=h["global_batch"][-1])
 
 
+def bench_gns_predict(steps):
+    """Predictive GNS controller (DESIGN §14): the same adaptive schedule
+    with the predictor on vs off, AOT warmup enabled in both.  Emits the
+    prediction trajectory into BENCH_step.json['gns_prediction'] — the
+    predicted vs actual rung-crossing step and whether warmup turned each
+    measured rung transition into a cache hit (the acceptance claim: under
+    prediction, transition_hits == transitions with zero foreground compiles
+    at a transition)."""
+    from repro.launch.train import TrainJob, run_training, summarize
+    out = {}
+    for tag, predict in (("predict", True), ("baseline", False)):
+        job = TrainJob(arch="llama3.2-1b", steps=min(steps, 25), seq_len=64,
+                       base_global_batch=32, max_global_batch=64,
+                       base_micro_batch=2, max_micro_batch=2, base_accum=2,
+                       eta=0.12, step_impl="accum_norm", eval_every=0,
+                       aot_warmup=True, predict=predict)
+        # repro: allow(unfenced-timing) — whole-run span; run_training/serving materializes host floats every step, so the wall clock cannot run ahead of device work
+        t0 = time.time()
+        h = run_training(job)
+        s = summarize(h)
+        wall = round(time.time() - t0, 3)
+        eng = h["engine"]
+        # actual crossing: first step whose executed batch left the base rung
+        base_gb = h["global_batch"][0]
+        actual = next((st for st, gb in zip(h["step"], h["global_batch"])
+                       if gb > base_gb), -1)
+        # predicted crossing: first step that forecast a rung above base
+        predicted = next((st for st, r in zip(h["step"], h["pred_rung"])
+                          if r > base_gb), -1)
+        out[tag] = {
+            "wall_s": wall,
+            "transitions": eng["transitions"],
+            "transition_hits": eng["transition_hits"],
+            "compiles": eng["compiles"],
+            "warmups": eng["warmups"],
+            "actual_crossing_step": actual,
+            "predicted_crossing_step": predicted,
+            "pred_rung_trace": h["pred_rung"],
+            "pred_eta_trace": [round(e, 3) for e in h["pred_eta"]],
+            "batch_trace": h["global_batch"],
+        }
+        _row(f"gns_predict/{tag}", wall / max(s["steps"], 1) * 1e6,
+             steps=s["steps"], transitions=eng["transitions"],
+             transition_hits=eng["transition_hits"],
+             compiles=eng["compiles"], actual_cross=actual,
+             predicted_cross=predicted)
+    BENCH_JSON["gns_prediction"] = out
+
+
 BENCHES = {
     "table1_microllama": bench_table1_microllama,
     "table2_tinyllama": bench_table2_tinyllama,
     "table3_openllama": bench_table3_openllama,
     "engine_cache": bench_engine_cache,
+    "gns_predict": bench_gns_predict,
     "serve": bench_serve,
     "flat_stats": bench_flat_stats,
     "norm_test_overhead": bench_norm_test_overhead,

@@ -12,7 +12,7 @@ import os, sys
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from repro.core.gns import GNSTracker, gns_from_norm_test
+from repro.core.gns import GNSTracker, gns_from_norm_test, variance_groups
 from repro.launch.train import TrainJob, run_training
 
 ETA = 0.15
@@ -23,14 +23,20 @@ job = TrainJob(arch="llama3.2-1b", schedule="adaptive", eta=ETA,
                eval_every=0)
 hist = run_training(job)
 
+workers = hist["workers"]
 tracker = GNSTracker(alpha=0.8)
 print(f"{'step':>5} {'batch':>6} {'T_k':>9} {'B_simple':>10} {'B/eta^2':>10}")
 for i, step in enumerate(hist["step"]):
     b = hist["global_batch"][i]
-    # workers=1 on CPU; ACCUM-NORM's var_l1 is already on the eq.(5) scale,
-    # use the point estimate with J=accum-equivalent granularity
-    est = gns_from_norm_test(hist["var_l1"][i], hist["grad_sqnorm"][i], b, 1)
-    tracker = tracker.update(hist["var_l1"][i], hist["grad_sqnorm"][i], b, 2)
+    # var_l1 arrives on the J scale for both step impls; the GROUP count for
+    # the two-scale estimator comes from the recorded per-step plan
+    # (M·J groups for ACCUM-NORM), not a hardcoded constant
+    groups = variance_groups(job.step_impl, workers,
+                             hist["accum_steps"][i])
+    est = gns_from_norm_test(hist["var_l1"][i], hist["grad_sqnorm"][i], b,
+                             workers)
+    tracker = tracker.update(hist["var_l1"][i], hist["grad_sqnorm"][i], b,
+                             workers, groups=groups)
     if i % 5 == 0:
         print(f"{step:>5} {b:>6} {hist['T'][i]:>9.1f} "
               f"{est['b_simple']:>10.1f} {est['b_simple']/ETA**2:>10.1f}")

@@ -21,6 +21,8 @@ import dataclasses
 import math
 from dataclasses import dataclass, field, replace
 
+from repro.core.gns import (
+    GNSTracker, predict_target_batch, rung_crossing_eta, variance_groups)
 from repro.core.schedule import BatchPlan, quantize_to_ladder, round_plan
 
 
@@ -40,6 +42,22 @@ class ControllerConfig:
     # is quantized UP onto a ladder rung, so a batch increase reuses a
     # precompiled step instead of recompiling; None = paper-exact rounding
     ladder: tuple[BatchPlan, ...] | None = None
+    # predictive GNS companion (DESIGN §14): when on, every tested step also
+    # feeds the (var_l1, grad_sqnorm) pair into an EMA-smoothed unbiased GNS
+    # estimate whose trajectory predicts WHICH rung the controller will jump
+    # to and WHEN — carried in ControllerState for the engine's AOT-warmup
+    # targeting.  Prediction NEVER alters the batch trajectory: with
+    # predict=True and predict=False the emitted plans are identical, which
+    # is what lets pre-predictor checkpoints resume bit-identically with a
+    # zeroed predictor.
+    predict: bool = False
+    gns_alpha: float = 0.9        # EMA over the S and |G|² estimates
+    # variance-group source for the two-scale estimator: 'workers' = J
+    # groups (FSDP-Norm), 'accum' = M·J groups (ACCUM-NORM) — see
+    # core.gns.variance_groups
+    gns_groups: str = "workers"
+    slope_alpha: float = 0.5      # EMA over the per-tested-step ΔB_simple
+    predict_horizon: int = 5      # tested-steps lookahead for the target rung
 
 
 def _resolve_plan(cfg: ControllerConfig, desired: int) -> BatchPlan:
@@ -66,6 +84,17 @@ class ControllerState:
     last_T: float = 0.0
     num_increases: int = 0
     at_max: bool = False
+    # predictive-GNS companion state (DESIGN §14; all inert defaults unless
+    # cfg.predict).  Flat scalars, not a nested GNSTracker, so the JSON
+    # checkpoint round-trip stays a plain dict of primitives.
+    gns_s: float = 0.0            # EMA of the S (tr Σ) estimate
+    gns_g2: float = 0.0           # EMA of the |G|² estimate
+    gns_init: bool = False        # EMAs hold a real (valid) observation
+    gns_b_prev: float = 0.0       # previous smoothed B_simple (slope input)
+    gns_slope: float = 0.0        # EMA of per-tested-step ΔB_simple
+    gns_slope_init: bool = False
+    pred_rung: int = 0            # predicted target rung (global batch); 0 = none
+    pred_eta_steps: float = -1.0  # tested-steps to crossing; -1 = unknown
 
 
 def init_controller(cfg: ControllerConfig) -> ControllerState:
@@ -88,17 +117,80 @@ def controller_state_as_dict(state: ControllerState) -> dict:
 
 
 def controller_state_from_dict(d: dict) -> ControllerState:
-    """Rebuild a `ControllerState` saved by `controller_state_as_dict`."""
+    """Rebuild a `ControllerState` saved by `controller_state_as_dict`.
+
+    The predictor fields load with SAFE DEFAULTS when absent (a checkpoint
+    written before the predictor existed): prediction only steers AOT-warmup
+    targeting, never the batch trajectory, so a zeroed predictor re-seeds
+    itself on the next tested step and the resumed run's losses/batches stay
+    bit-identical to the uninterrupted one — a loud error would make old
+    checkpoints unloadable for zero correctness gain."""
     plan = BatchPlan(**{k: int(v) for k, v in d["plan"].items()})
     return ControllerState(
         plan=plan, step=int(d["step"]), samples=int(d["samples"]),
         ema_stat=float(d["ema_stat"]), ema_init=bool(d["ema_init"]),
         last_T=float(d["last_T"]), num_increases=int(d["num_increases"]),
-        at_max=bool(d["at_max"]))
+        at_max=bool(d["at_max"]),
+        gns_s=float(d.get("gns_s", 0.0)), gns_g2=float(d.get("gns_g2", 0.0)),
+        gns_init=bool(d.get("gns_init", False)),
+        gns_b_prev=float(d.get("gns_b_prev", 0.0)),
+        gns_slope=float(d.get("gns_slope", 0.0)),
+        gns_slope_init=bool(d.get("gns_slope_init", False)),
+        pred_rung=int(d.get("pred_rung", 0)),
+        pred_eta_steps=float(d.get("pred_eta_steps", -1.0)))
 
 
 def norm_test_statistic(var_l1: float, grad_sqnorm: float, eta: float) -> float:
     return float(var_l1) / (eta**2 * float(grad_sqnorm) + 1e-30)
+
+
+def _predictor_fields(cfg: ControllerConfig, state: ControllerState,
+                      var_l1: float, grad_sqnorm: float) -> dict:
+    """One predictive-GNS update for a TESTED step: smooth the unbiased
+    two-scale estimate, fit the slope of the smoothed B_simple, and emit the
+    rung-crossing ETA + predicted target rung (DESIGN §14).  Returns the
+    full predictor field dict — unchanged copies when cfg.predict is off —
+    so both controller_update return paths can splat it."""
+    fields = dict(gns_s=state.gns_s, gns_g2=state.gns_g2,
+                  gns_init=state.gns_init, gns_b_prev=state.gns_b_prev,
+                  gns_slope=state.gns_slope,
+                  gns_slope_init=state.gns_slope_init,
+                  pred_rung=state.pred_rung,
+                  pred_eta_steps=state.pred_eta_steps)
+    if not cfg.predict:
+        return fields
+    groups = variance_groups(
+        "accum_norm" if cfg.gns_groups == "accum" else "fsdp_norm",
+        state.plan.workers, state.plan.accum_steps)
+    tracker = GNSTracker(cfg.gns_alpha, state.gns_s, state.gns_g2,
+                         state.gns_init)
+    tracker = tracker.update(var_l1, grad_sqnorm, state.plan.global_batch,
+                             state.plan.workers, groups=groups)
+    fields.update(gns_s=tracker.s_ema, gns_g2=tracker.g2_ema,
+                  gns_init=tracker.initialized)
+    if not tracker.initialized:
+        return fields                 # estimate skipped (degenerate/clamped)
+    b_now = tracker.b_simple
+    if state.gns_init:                # gns_b_prev holds the previous B
+        delta = b_now - state.gns_b_prev
+        slope = (cfg.slope_alpha * state.gns_slope
+                 + (1 - cfg.slope_alpha) * delta
+                 if state.gns_slope_init else delta)   # seed, don't blend
+        fields.update(gns_slope=slope, gns_slope_init=True)
+    else:
+        slope = 0.0
+    fields["gns_b_prev"] = b_now
+    b_k = state.plan.global_batch
+    fields["pred_eta_steps"] = rung_crossing_eta(
+        b_now, slope if fields["gns_slope_init"] else 0.0, b_k, cfg.eta,
+        cfg.workers)
+    rungs = ([min(p.global_batch, cfg.max_global_batch) for p in cfg.ladder
+              if p.global_batch <= cfg.max_global_batch]
+             if cfg.ladder else None)
+    fields["pred_rung"] = predict_target_batch(
+        b_now, slope if fields["gns_slope_init"] else 0.0,
+        cfg.predict_horizon, b_k, cfg.eta, cfg.workers, rungs)
+    return fields
 
 
 def controller_update(cfg: ControllerConfig, state: ControllerState,
@@ -107,9 +199,15 @@ def controller_update(cfg: ControllerConfig, state: ControllerState,
     new_samples = state.samples + state.plan.global_batch
     step = state.step + 1
 
-    # max-batch shortcut: the paper stops testing once b_k == max
+    # max-batch shortcut: the paper stops testing once b_k == max.  The
+    # predictive companion still observes — the (var_l1, gsq) pair arrives
+    # free with every step and the at_max latch would otherwise starve the
+    # tracker exactly when the GNS trajectory becomes informative.  With
+    # cfg.predict off, _predictor_fields returns unchanged copies and this
+    # return is bit-identical to the pre-predictor controller.
     if state.at_max or (cfg.test_interval > 1 and step % cfg.test_interval != 0):
-        return replace(state, step=step, samples=new_samples)
+        pred = _predictor_fields(cfg, state, var_l1, grad_sqnorm)
+        return replace(state, step=step, samples=new_samples, **pred)
 
     t_raw = norm_test_statistic(var_l1, grad_sqnorm, cfg.eta)
     if cfg.ema > 0:
@@ -119,6 +217,10 @@ def controller_update(cfg: ControllerConfig, state: ControllerState,
     else:
         ema = t_raw
         t_eff = t_raw
+
+    # predictive companion: pure observer of the same (var_l1, gsq) pair —
+    # it steers warmup targeting, never the plan below
+    pred = _predictor_fields(cfg, state, var_l1, grad_sqnorm)
 
     b_k = state.plan.global_batch
     if t_eff > b_k:
@@ -141,6 +243,7 @@ def controller_update(cfg: ControllerConfig, state: ControllerState,
             plan=plan, step=step, samples=new_samples, ema_stat=ema,
             ema_init=True, last_T=t_raw,
             num_increases=state.num_increases + int(increased),
-            at_max=plan.global_batch >= min(cfg.max_global_batch, cap))
+            at_max=plan.global_batch >= min(cfg.max_global_batch, cap),
+            **pred)
     return replace(state, step=step, samples=new_samples, ema_stat=ema,
-                   ema_init=True, last_T=t_raw)
+                   ema_init=True, last_T=t_raw, **pred)

@@ -151,10 +151,19 @@ class ConstantSchedule:
 
 class StagewiseSchedule:
     """Prespecified warmup stages, e.g. 2048–4096–8192 for 2.5–2.5–95% of
-    training samples (paper §5.1 baseline mimicking Nemotron-4/GPT-3 ramps)."""
+    training samples (paper §5.1 baseline mimicking Nemotron-4/GPT-3 ramps).
+
+    Stage sizes round UP to a launchable plan: the old `round_plan(batch,
+    ..., max_global=batch)` call shrank a stage whose size was not divisible
+    by workers·micro_batch (the cap clamped the rounded-up plan back BELOW
+    the prescribed size), and never ladder-quantized — under the bucketed
+    engine such a plan's padded shape matched no rung and the run died with
+    `LadderShapeError` mid-training.  Pass the engine's ladder to emit rung
+    plans directly."""
 
     def __init__(self, stages: tuple[tuple[float, int], ...], workers: int,
-                 micro_batch: int, max_micro_batch: int, base_accum: int):
+                 micro_batch: int, max_micro_batch: int, base_accum: int,
+                 ladder: tuple[BatchPlan, ...] | None = None):
         # stages: ((fraction_of_samples, global_batch), ...) fractions sum to 1
         assert abs(sum(f for f, _ in stages) - 1.0) < 1e-6
         self.stages = stages
@@ -162,6 +171,7 @@ class StagewiseSchedule:
         self.micro_batch = micro_batch
         self.max_micro_batch = max_micro_batch
         self.base_accum = base_accum
+        self.ladder = ladder
 
     def plan_for(self, samples_processed: int, total_samples: int,
                  stats=None) -> BatchPlan:
@@ -173,6 +183,38 @@ class StagewiseSchedule:
             if frac < acc:
                 batch = b
                 break
-        return round_plan(batch, self.workers, self.micro_batch,
+        # no max_global cap: an indivisible stage size must round UP to the
+        # covering (J·M·mb) plan, never shrink below the prescribed stage
+        plan = round_plan(batch, self.workers, self.micro_batch,
                           self.max_micro_batch, self.base_accum,
-                          max_global=batch, micro_buckets=True)
+                          max_global=_UNCAPPED, micro_buckets=True)
+        if self.ladder:
+            # quantize onto a rung only AT or ABOVE the ladder floor: a stage
+            # below the smallest rung runs padded into the floor bucket (the
+            # engine's standard sub-rung path) — inflating it to the floor
+            # would consume more samples than the stage prescribes
+            floor = min(p.global_batch for p in self.ladder)
+            if plan.global_batch >= floor:
+                plan = quantize_to_ladder(plan.global_batch, self.ladder)
+        return plan
+
+
+# large enough that round_plan's max_global clamp never engages (stagewise
+# rounding must only ever round UP); not sys.maxsize so the math stays exact
+_UNCAPPED = 1 << 40
+
+
+# ------------------------------------------------- accumulation-free ----
+
+def accum_free_plan(plan: BatchPlan) -> tuple[BatchPlan, int]:
+    """Re-plan an accumulated step as `accum_steps` optimizer steps of the
+    same microbatch with M=1 (Marek et al., "Gradient Accumulation Is
+    Wasteful"): on rungs where the whole per-step batch fits per device,
+    accumulation buys nothing — trade it for proportionally more optimizer
+    steps.  Returns (sub_plan, repeats) with sub_plan.global_batch ·
+    repeats == plan.global_batch, so the schedule consumes exactly the same
+    samples (DESIGN §14 equivalence claim)."""
+    sub = BatchPlan(global_batch=plan.workers * plan.micro_batch,
+                    micro_batch=plan.micro_batch, accum_steps=1,
+                    workers=plan.workers)
+    return sub, plan.accum_steps

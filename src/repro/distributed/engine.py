@@ -66,6 +66,14 @@ class EngineStats:
     real_samples: int = 0
     padded_samples: int = 0
     buckets_used: list = field(default_factory=list)
+    # rung-transition accounting (DESIGN §14): a transition is a step whose
+    # input signature differs from the previous step's; a transition HIT
+    # found its executable already cached or pending from an AOT warmup
+    # (a pending compile is still a hit — the step waits on the background
+    # build instead of paying a fresh foreground trace).  Predictive warmup
+    # targeting aims for transition_hits == transitions.
+    transitions: int = 0
+    transition_hits: int = 0
     # multi-host coordination (DESIGN §8.1; all zero without a coordinator)
     barriers: int = 0          # rung-entry barriers crossed
     barrier_wait_s: float = 0.0   # seconds THIS host waited for the fleet
@@ -97,6 +105,8 @@ class EngineStats:
             "hit_rate": round(self.hit_rate, 4),
             "padding_waste": round(self.padding_waste, 4),
             "buckets_used": list(self.buckets_used),
+            "transitions": self.transitions,
+            "transition_hits": self.transition_hits,
             "barriers": self.barriers,
             "barrier_wait_s": round(self.barrier_wait_s, 4),
             "desyncs": self.desyncs,
@@ -378,9 +388,9 @@ class BucketedEngine(RungCache):
         self._params_like = params_like
         self._opt_like = opt_like
         self._coord = coordinator
-        self._entered_key = None      # last rung key this host stepped in
+        self._last_key = None         # last step signature (transition stats)
         self._agree_seq = 0           # monotone warmup-agreement topic id
-        self._agreed_for = None       # bucket tag the last agreement covered
+        self._agreed_for = None       # (bucket, proposal) the last agreement
         self._agreed_target = None    # ...and the rung the fleet settled on
         if persistent_cache_dir:
             enable_persistent_cache(persistent_cache_dir)
@@ -469,9 +479,18 @@ class BucketedEngine(RungCache):
         new executable together."""
         self.check_on_ladder(batch)
         key = _batch_key(batch)
-        if self._coord is not None and key != self._entered_key:
-            self._enter_rung(key)
-            self._entered_key = key
+        if key != self._last_key:
+            if self._last_key is not None:
+                # a rung transition: count whether AOT warmup covered it
+                # (cached, or pending — waiting on a background compile is
+                # the warmed path, not a fresh foreground trace)
+                with self._lock:
+                    self.stats.transitions += 1
+                    if key in self._cache or key in self._pending:
+                        self.stats.transition_hits += 1
+            if self._coord is not None:
+                self._enter_rung(key)
+            self._last_key = key
         return self.lookup(key, _sds(batch))
 
     def _enter_rung(self, key: tuple):
@@ -540,33 +559,38 @@ class BucketedEngine(RungCache):
             for k, v in batch_example.items()}
         self.submit_warmup(_batch_key(batch_like), batch_like)
 
-    def warmup_agreed(self, bucket: BatchPlan, batch_example: dict):
-        """Coordinated AOT warmup: the fleet agrees on ONE next rung to
+    def warmup_agreed(self, bucket: BatchPlan, batch_example: dict,
+                      proposal: BatchPlan | None = None):
+        """Coordinated AOT warmup: the fleet agrees on ONE rung to
         background-compile instead of each host guessing (DESIGN §8.1).
 
-        Every host proposes its local `next_bucket(bucket)`; the leader's
-        proposal wins.  A host whose proposal differs (controller state
-        drifted, restart mid-ladder) counts a `desync` and warms the agreed
-        rung anyway, so the eventual rung transition is a cache hit
-        everywhere.  Returns the rung actually queued (None at the ladder
-        top).
+        `proposal` is the rung to warm — the caller's predicted target rung
+        (DESIGN §14) or, when None, the next-larger rung (the pre-predictor
+        behavior).  Every host submits its proposal; the leader's wins.  A
+        host whose proposal differs (controller state drifted, restart
+        mid-ladder) counts a `desync` and warms the agreed rung anyway, so
+        the eventual rung transition is a cache hit everywhere.  Returns
+        the rung actually queued (None at the ladder top).
 
-        One agreement per BUCKET CHANGE, not per step: the proposal is a
-        pure function of the current bucket, so re-agreeing every step
-        would only add a per-step fleet rendezvous (and, on the file
-        coordinator, a file per step) to the hot loop for an answer that
-        cannot change.  Topic ids are a per-engine monotone counter and the
-        bucket sequence is deterministic, so hosts consume the same topic
-        stream.
+        One agreement per (bucket, proposal) CHANGE, not per step:
+        re-agreeing every step would add a per-step fleet rendezvous (and,
+        on the file coordinator, a file per step) to the hot loop for an
+        answer that cannot change.  Topic ids are a per-engine monotone
+        counter, and both the bucket sequence and the caller's proposal are
+        pure functions of globally-reduced controller state, so hosts
+        trigger re-agreement at the same steps and consume the same topic
+        stream; a host whose local state drifted still converges on the
+        leader's answer via the desync path.
 
         Uncoordinated (or world-of-one) engines skip the agreement and
-        behave exactly like `warmup(next_bucket(bucket), ...)`."""
-        proposal = self.next_bucket(bucket)
+        behave exactly like `warmup(proposal or next_bucket(bucket), ...)`."""
+        if proposal is None:
+            proposal = self.next_bucket(bucket)
         if (not self._aot or self._coord is None
                 or getattr(self._coord, "world", 1) == 1):
             self.warmup(proposal, batch_example)
             return proposal
-        cur = _plan_tag(bucket)
+        cur = (_plan_tag(bucket), _plan_tag(proposal))
         if cur != self._agreed_for:
             self._agree_seq += 1
             prop_tag = _plan_tag(proposal)

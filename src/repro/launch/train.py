@@ -34,8 +34,8 @@ from repro.core.controller import (
     ControllerConfig, controller_state_as_dict, controller_state_from_dict,
     init_controller, controller_update)
 from repro.core.schedule import (
-    BatchPlan, ConstantSchedule, StagewiseSchedule, bucket_ladder,
-    parse_ladder, round_plan)
+    BatchPlan, ConstantSchedule, StagewiseSchedule, accum_free_plan,
+    bucket_ladder, parse_ladder, round_plan)
 from repro.data.pipeline import (
     MarkovTokens, UniformTokens, make_batch, pad_to_bucket)
 from repro.distributed.coordination import (
@@ -73,6 +73,20 @@ class TrainJob:
     base_accum: int = 2
     test_interval: int = 1
     ema: float = 0.0
+    # predictive GNS companion (DESIGN §14): fit the smoothed B_simple
+    # trajectory and AOT-warm the PREDICTED target rung instead of blindly
+    # the next one.  Pure observer — the batch trajectory is identical with
+    # predict on or off.
+    predict: bool = False
+    gns_alpha: float = 0.9
+    slope_alpha: float = 0.5
+    predict_horizon: int = 5
+    # accumulation-free low rungs (DESIGN §14; Marek et al.): re-plan rungs
+    # with global batch <= accum_free_below as M=1 plans run `M` times —
+    # same samples per scheduled step, proportionally more optimizer steps.
+    # accum_free_below=0 means auto (workers * max_micro_batch).
+    accum_free: bool = False
+    accum_free_below: int = 0
     stages: tuple = ((0.025, 16), (0.025, 64), (0.95, 256))
     peak_lr: float = 4e-4
     min_lr: float = 4e-5
@@ -200,13 +214,33 @@ def run_training(job: TrainJob) -> dict:
     else:
         ladder = parse_ladder(job.bucket_ladder, workers)
 
+    # accum-free low rungs need their (M=1, J·mb) shapes ON the ladder or
+    # the engine rejects them with LadderShapeError.  APPEND the extra rungs:
+    # quantize_to_ladder's sort is stable, so on a capacity tie the original
+    # accumulated rung still wins for normal plan quantization and the
+    # accum-free branch selects its M=1 rung explicitly.
+    accum_free_below = job.accum_free_below or workers * job.max_micro_batch
+    if job.accum_free and ladder is not None:
+        have = {(p.accum_steps, p.micro_batch) for p in ladder}
+        extra = []
+        for mb in sorted({p.micro_batch for p in ladder}):
+            if (1, mb) not in have:
+                extra.append(BatchPlan(global_batch=workers * mb,
+                                       micro_batch=mb, accum_steps=1,
+                                       workers=workers))
+                have.add((1, mb))
+        ladder = ladder + tuple(extra)
+
     ctrl_cfg = ControllerConfig(
         eta=job.eta, workers=workers,
         base_micro_batch=job.base_micro_batch,
         max_micro_batch=job.max_micro_batch, base_accum=job.base_accum,
         base_global_batch=job.base_global_batch,
         max_global_batch=job.max_global_batch,
-        test_interval=job.test_interval, ema=job.ema, ladder=ladder)
+        test_interval=job.test_interval, ema=job.ema, ladder=ladder,
+        predict=job.predict, gns_alpha=job.gns_alpha,
+        gns_groups="accum" if job.step_impl == "accum_norm" else "workers",
+        slope_alpha=job.slope_alpha, predict_horizon=job.predict_horizon)
     ctrl = init_controller(ctrl_cfg)
 
     if job.schedule == "constant":
@@ -216,7 +250,7 @@ def run_training(job: TrainJob) -> dict:
     elif job.schedule == "stagewise":
         schedule = StagewiseSchedule(tuple(job.stages), workers,
                                      job.base_micro_batch, job.max_micro_batch,
-                                     job.base_accum)
+                                     job.base_accum, ladder=ladder)
     else:
         schedule = None
 
@@ -278,7 +312,9 @@ def run_training(job: TrainJob) -> dict:
 
     history = {"step": [], "loss": [], "val_loss": [], "global_batch": [],
                "T": [], "var_l1": [], "grad_sqnorm": [], "samples": [],
-               "time": []}
+               "time": [], "accum_steps": [], "opt_steps": [],
+               "pred_rung": [], "pred_eta": []}
+    history["workers"] = workers
     samples = 0
     step = 0
 
@@ -368,35 +404,101 @@ def run_training(job: TrainJob) -> dict:
                     plan = ctrl.plan
                 seq_len = seq_len_for(samples)
                 batch_np = make_batch(source, step, plan, seq_len, extra_specs)
+                bucket = None
                 if engine is not None:
                     # no max_global clamp here: the ladder top is built to
                     # cover every schedule plan, including stagewise stages
                     # configured above max_global_batch (the controller
                     # clamps its own plans)
                     bucket = engine.bucket_for(plan.global_batch)
-                    batch_np = pad_to_bucket(batch_np, plan, bucket)
-                    step_fn = engine.get_step(batch_np)
-                    engine.observe(plan, bucket)
-                    # coordinated: the fleet agrees on ONE rung to warm (each
-                    # host's guess could drift); uncoordinated: next_bucket
-                    engine.warmup_agreed(bucket, batch_np)
-                batch = jax.tree.map(jnp.asarray, batch_np)
-                lr = warmup_cosine(samples, peak_lr=job.peak_lr,
-                                   min_lr=job.min_lr,
-                                   warmup_steps=warmup_samples,
-                                   total_steps=total_samples)
-                if engine is None:
-                    step_fn = get_step(plan, batch)
-                params, opt_state, metrics = step_fn(params, opt_state,
-                                                     batch, lr)
 
-                var_l1 = float(metrics["var_l1"])
-                gsq = float(metrics["grad_sqnorm"])
-                loss = float(metrics["loss"])
-                samples += plan.global_batch
+                # accum-free low rungs (DESIGN §14): re-plan this scheduled
+                # step as M optimizer steps of the same (J·mb) microbatch.
+                # Guards: the plan must BE its rung (a padded bucket could
+                # leave an all-padding sub-step whose zero gradient still
+                # weight-decays — not equivalent), and on a TESTED adaptive
+                # step the M=1 sub-plan must still carry live variance
+                # signal (FSDP-Norm with J>1 compares worker gradients;
+                # ACCUM-NORM's M=1 variance is identically zero and would
+                # kill the controller) — otherwise keep the accumulated
+                # path for that step.
+                tested = (job.schedule == "adaptive" and not ctrl.at_max
+                          and (ctrl_cfg.test_interval <= 1
+                               or (ctrl.step + 1) % ctrl_cfg.test_interval == 0))
+                signal_alive = job.step_impl == "fsdp_norm" and workers > 1
+                use_af = (job.accum_free and plan.accum_steps > 1
+                          and plan.global_batch <= accum_free_below
+                          and (bucket is None or bucket == plan)
+                          and (job.schedule != "adaptive" or not tested
+                               or signal_alive))
+
+                if use_af:
+                    sub_plan, repeats = accum_free_plan(plan)
+                    sub_losses = []
+                    for m in range(repeats):
+                        sub_np = {k: v[m:m + 1] for k, v in batch_np.items()}
+                        if engine is not None:
+                            # (1, J·mb) is on the ladder by construction
+                            # (the accum-free rungs appended above)
+                            step_fn = engine.get_step(sub_np)
+                            engine.observe(sub_plan, sub_plan)
+                        sub_b = jax.tree.map(jnp.asarray, sub_np)
+                        lr = warmup_cosine(samples, peak_lr=job.peak_lr,
+                                           min_lr=job.min_lr,
+                                           warmup_steps=warmup_samples,
+                                           total_steps=total_samples)
+                        if engine is None:
+                            step_fn = get_step(sub_plan, sub_b)
+                        params, opt_state, metrics = step_fn(
+                            params, opt_state, sub_b, lr)
+                        samples += sub_plan.global_batch
+                        sub_losses.append(float(metrics["loss"]))
+                    loss = float(np.mean(sub_losses))
+                    # the last sub-step's var_l1 sits on the sub-batch scale
+                    # (E[var_l1] ≈ trΣ·J/b): rescale to the scheduled plan's
+                    # batch so the controller sees the accumulated-path scale
+                    var_l1 = (float(metrics["var_l1"])
+                              * sub_plan.global_batch / plan.global_batch)
+                    gsq = float(metrics["grad_sqnorm"])
+                    exec_plan, opt_steps = sub_plan, repeats
+                else:
+                    if engine is not None:
+                        batch_np = pad_to_bucket(batch_np, plan, bucket)
+                        step_fn = engine.get_step(batch_np)
+                        engine.observe(plan, bucket)
+                    batch = jax.tree.map(jnp.asarray, batch_np)
+                    lr = warmup_cosine(samples, peak_lr=job.peak_lr,
+                                       min_lr=job.min_lr,
+                                       warmup_steps=warmup_samples,
+                                       total_steps=total_samples)
+                    if engine is None:
+                        step_fn = get_step(plan, batch)
+                    params, opt_state, metrics = step_fn(params, opt_state,
+                                                         batch, lr)
+                    var_l1 = float(metrics["var_l1"])
+                    gsq = float(metrics["grad_sqnorm"])
+                    loss = float(metrics["loss"])
+                    samples += plan.global_batch
+                    exec_plan, opt_steps = plan, 1
                 step += 1
                 if job.schedule == "adaptive":
                     ctrl = controller_update(ctrl_cfg, ctrl, var_l1, gsq)
+                if engine is not None:
+                    # warmup AFTER the controller decision (DESIGN §14): warm
+                    # the rung the fleet is actually headed to — the
+                    # decided-growth rung when the controller just grew past
+                    # this bucket, else the predicted target rung, else the
+                    # next rung up.  The proposal is a pure function of
+                    # globally-reduced stats, so every host proposes the same
+                    # rung and PR 5's leader-decided agreement stays aligned.
+                    proposal = None
+                    if job.schedule == "adaptive":
+                        if ctrl.plan.global_batch > bucket.global_batch:
+                            proposal = engine.bucket_for(
+                                ctrl.plan.global_batch)
+                        elif job.predict and ctrl.pred_rung > bucket.global_batch:
+                            proposal = engine.bucket_for(ctrl.pred_rung)
+                    engine.warmup_agreed(bucket, batch_np, proposal=proposal)
 
                 val = math.nan
                 if job.eval_every and (step % job.eval_every == 0
@@ -413,10 +515,17 @@ def run_training(job: TrainJob) -> dict:
                 history["grad_sqnorm"].append(gsq)
                 history["samples"].append(samples)
                 history["time"].append(time.time() - t0)
+                history["accum_steps"].append(exec_plan.accum_steps)
+                history["opt_steps"].append(opt_steps)
+                history["pred_rung"].append(
+                    ctrl.pred_rung if job.schedule == "adaptive" else 0)
+                history["pred_eta"].append(
+                    ctrl.pred_eta_steps if job.schedule == "adaptive" else -1.0)
                 if log_f:
                     log_f.write(
                         f"{step},{samples},{plan.global_batch},"
-                        f"{plan.accum_steps},{plan.micro_batch},{loss:.4f},"
+                        f"{exec_plan.accum_steps},{exec_plan.micro_batch},"
+                        f"{loss:.4f},"
                         f"{val:.4f},{t_stat:.1f},{var_l1:.4g},{gsq:.4g},"
                         f"{time.time()-t0:.1f}\n")
                     log_f.flush()
@@ -469,7 +578,8 @@ def summarize(history: dict) -> dict:
     if eng:
         out["engine"] = {k: eng[k] for k in
                          ("compiles", "hit_rate", "padding_waste", "warmups",
-                          "barrier_wait_s", "desyncs", "disk_cache_hits")}
+                          "barrier_wait_s", "desyncs", "disk_cache_hits",
+                          "transitions", "transition_hits")}
     return out
 
 

@@ -1,11 +1,13 @@
 """Algorithm 1 controller: unit + hypothesis property tests."""
+import json
 import math
 
 import pytest
 from proptest import given, settings, st
 
 from repro.core.controller import (
-    ControllerConfig, init_controller, controller_update)
+    ControllerConfig, controller_state_as_dict, controller_state_from_dict,
+    init_controller, controller_update)
 from repro.core.schedule import round_plan
 
 
@@ -169,3 +171,89 @@ def test_ema_first_tested_step_seeds_not_blends():
     s = controller_update(cfg, s, 25.0, 1.0)
     s = controller_update(cfg, s, 25.0, 1.0)
     assert s.ema_stat == pytest.approx(250.0)
+
+
+# -------------------------------------------- predictive GNS companion ----
+
+def _predict_cfg(**kw):
+    base = dict(eta=0.12, workers=1, base_micro_batch=2, max_micro_batch=2,
+                base_global_batch=4, max_global_batch=64, base_accum=2,
+                predict=True, gns_groups="accum")
+    base.update(kw)
+    return _ladder_cfg(base.pop("workers"), **base)
+
+
+def _drive(cfg, state, stream):
+    for var, gsq in stream:
+        state = controller_update(cfg, state, var, gsq)
+    return state
+
+
+def test_predict_never_alters_batch_trajectory():
+    """The predictor is a pure observer: with predict on and off, identical
+    stat streams yield identical plan/T/EMA trajectories — the property that
+    lets pre-predictor checkpoints resume bit-identically."""
+    on, off = _predict_cfg(), _predict_cfg(predict=False)
+    s_on, s_off = init_controller(on), init_controller(off)
+    stream = [(0.01 * k, 1.0) for k in range(1, 20)]
+    for var, gsq in stream:
+        s_on = controller_update(on, s_on, var, gsq)
+        s_off = controller_update(off, s_off, var, gsq)
+        assert s_on.plan == s_off.plan
+        assert s_on.last_T == s_off.last_T
+        assert s_on.ema_stat == s_off.ema_stat
+    assert s_on.gns_init          # ...while the predictor actually tracked
+    assert not s_off.gns_init
+
+
+def test_predictor_state_roundtrips_bit_exact_through_json():
+    """The new predictor fields must survive the checkpoint hop exactly —
+    through JSON, like checkpoint metadata does (DESIGN §12)."""
+    cfg = _predict_cfg()
+    s = _drive(cfg, init_controller(cfg),
+               [(0.02 * k, 1.0) for k in range(1, 12)])
+    assert s.gns_init and s.gns_slope_init   # non-trivial predictor state
+    d = json.loads(json.dumps(controller_state_as_dict(s)))
+    assert controller_state_from_dict(d) == s
+
+
+def test_old_checkpoint_without_predictor_keys_loads_safe_defaults():
+    """A checkpoint written before the predictor existed (no gns_*/pred_*
+    keys) loads with zeroed predictor state: prediction never steers the
+    batch trajectory, so the resumed run stays bit-identical while the
+    tracker re-seeds on the next tested step."""
+    cfg = _predict_cfg()
+    s = _drive(cfg, init_controller(cfg),
+               [(0.02 * k, 1.0) for k in range(1, 12)])
+    d = controller_state_as_dict(s)
+    old = {k: v for k, v in d.items()
+           if not k.startswith(("gns_", "pred_"))}
+    restored = controller_state_from_dict(old)
+    assert restored.plan == s.plan and restored.step == s.step
+    assert restored.ema_stat == s.ema_stat
+    assert not restored.gns_init and not restored.gns_slope_init
+    assert restored.pred_rung == 0 and restored.pred_eta_steps == -1.0
+    # and the zeroed predictor emits the same future PLANS as the populated
+    # one on the same continuation stream
+    cont = [(0.02 * k, 1.0) for k in range(12, 20)]
+    assert _drive(cfg, restored, cont).plan == _drive(cfg, s, cont).plan
+
+
+def test_predictor_targets_a_reachable_rung():
+    """A growing noise stream drives the predicted rung AHEAD of (>=) the
+    current plan and onto the ladder; the ETA becomes finite before the
+    crossing and 0.0 once the test fires."""
+    cfg = _predict_cfg()
+    s = init_controller(cfg)
+    rungs = {min(p.global_batch, cfg.max_global_batch) for p in cfg.ladder}
+    saw_ahead = False
+    for k in range(1, 40):
+        s = controller_update(cfg, s, 0.004 * k, 1.0)
+        if s.at_max:
+            break
+        if s.gns_init:
+            assert s.pred_rung in rungs
+            assert s.pred_rung >= s.plan.global_batch
+            saw_ahead |= s.pred_rung > s.plan.global_batch
+            assert s.pred_eta_steps >= 0.0 or s.pred_eta_steps == -1.0
+    assert saw_ahead, "predictor never targeted a rung above the current one"

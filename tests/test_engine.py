@@ -318,6 +318,72 @@ def test_run_training_engine_stats_end_to_end():
     assert all(np.isfinite(l) for l in h["loss"])
 
 
+def test_warmup_agreed_proposal_targets_requested_rung():
+    """`warmup_agreed` warms the CALLER's proposal (the predicted target
+    rung, DESIGN §14) when one is given — not blindly the next rung up —
+    and still defaults to next_bucket without one."""
+    ladder = parse_ladder("2:1,2:2,2:4,2:8", workers=1)
+    builds = []
+
+    class FakeJitted:
+        def lower(self, *a):
+            return self
+
+        def compile(self):
+            return lambda *a: None
+
+    def aot_wrap(batch_like):
+        builds.append(batch_like["tokens"].shape[:2])
+        return FakeJitted()
+
+    engine = BucketedEngine(aot_wrap, ladder, params_like={}, opt_like={},
+                            aot_warmup=True)
+    src = MarkovTokens(vocab_size=32, seed=0)
+    batch = make_batch(src, 0, ladder[0], seq_len=4)
+    # predicted rung two levels up: warm THAT one, skipping ladder[1]
+    queued = engine.warmup_agreed(ladder[0], batch, proposal=ladder[2])
+    engine.drain()
+    assert queued == ladder[2]
+    assert builds == [(ladder[2].accum_steps, ladder[2].micro_batch)]
+    # no proposal: the pre-predictor default (next rung up)
+    queued = engine.warmup_agreed(ladder[0], batch)
+    engine.drain()
+    assert queued == ladder[1]
+    assert builds[-1] == (ladder[1].accum_steps, ladder[1].micro_batch)
+    # stepping into the predicted rung later is a transition HIT
+    plan2 = ladder[2]
+    b0 = pad_to_bucket(make_batch(src, 0, ladder[0], seq_len=4),
+                       ladder[0], ladder[0])
+    b2 = pad_to_bucket(make_batch(src, 1, plan2, seq_len=4), plan2, plan2)
+    engine.get_step(b0)
+    engine.get_step(b2)
+    assert engine.stats.transitions == 1
+    assert engine.stats.transition_hits == 1
+
+
+def test_predictive_run_rung_transitions_are_cache_hits():
+    """Acceptance: predictive mode at smoke scale warms the rung the
+    controller actually transitions to — every measured rung transition is
+    a cache hit (the foreground never traces it), with per-rung compiles
+    unchanged.  Base 32 of a 64-ladder so the two-scale GNS estimate is
+    valid (M·J large) and the predictor populates mid-run."""
+    from repro.launch.train import TrainJob, run_training
+    job = TrainJob(arch="llama3.2-1b", steps=8, seq_len=32,
+                   base_global_batch=32, max_global_batch=64,
+                   base_micro_batch=2, max_micro_batch=2, base_accum=2,
+                   eta=0.12, step_impl="accum_norm", eval_every=0,
+                   predict=True, aot_warmup=True)
+    h = run_training(job)
+    eng = h["engine"]
+    assert eng["transitions"] >= 1
+    assert eng["transition_hits"] == eng["transitions"]
+    # one compile per rung visited, none of them foreground at a transition
+    assert eng["compiles"] == len(eng["buckets_used"])
+    # the predictor populated and targeted the rung the run sits on
+    assert any(r == 64 for r in h["pred_rung"])
+    assert all(np.isfinite(l) for l in h["loss"])
+
+
 def test_padded_batch_identical_grads_fsdp_multiworker(subproc):
     """Padding that lands unevenly across the J workers still yields the
     unpadded loss/params: the per-worker means are valid-token weighted

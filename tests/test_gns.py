@@ -1,9 +1,13 @@
 """GNS estimators: consistency with the norm-test statistics on synthetic
 gradients with known noise scale."""
+import math
+
 import numpy as np
 import pytest
 
-from repro.core.gns import gns_from_norm_test, unbiased_gns_pair, GNSTracker
+from repro.core.gns import (
+    GNSTracker, critical_gns_at, gns_from_norm_test, predict_target_batch,
+    rung_crossing_eta, unbiased_gns_pair, variance_groups)
 
 
 def synthetic_stats(b, J, d, mu, sigma, seed=0, reps=2000):
@@ -47,3 +51,108 @@ def test_tracker_converges():
         t = t.update(var_l1=4.0, grad_sqnorm=1.0, global_batch=64, workers=8)
     pair = unbiased_gns_pair(4.0, 1.0, 64, 8)
     assert abs(t.b_simple - pair["b_simple"]) < 1e-6
+
+
+# ----------------------------------------------------- variance groups ----
+
+def test_variance_groups():
+    assert variance_groups("fsdp_norm", 8) == 8
+    assert variance_groups("fsdp_norm", 8, accum_steps=4) == 8
+    assert variance_groups("accum_norm", 1, accum_steps=4) == 4
+    assert variance_groups("accum_norm", 2, accum_steps=4) == 8
+    # degenerate inputs clamp to one group, never zero
+    assert variance_groups("fsdp_norm", 0) == 1
+    assert variance_groups("accum_norm", 0, accum_steps=0) == 1
+
+
+def test_accum_norm_single_worker_gns_is_alive():
+    """Regression: with workers=1 the old estimator degenerated to
+    b_small == b_big and silently returned b_simple = 0 — every ACCUM-NORM
+    J=1 run had a dead GNS signal.  Passing the M·J group count revives it
+    and matches the J=M FSDP-Norm estimate on identical statistics."""
+    d, b, m = 16, 64, 8
+    mu = np.ones(d) * 0.5
+    sigma = 2.0
+    var_l1, gsq = synthetic_stats(b, m, d, mu, sigma, reps=4000)
+    # old call shape: J=1 and no groups -> clamped dead signal, flagged
+    dead = unbiased_gns_pair(var_l1, gsq, b, 1)
+    assert dead["b_simple"] == 0.0 and not dead["valid"]
+    # var_l1 simulated on the J=m scale; feeding workers=m groups=m matches
+    # the FSDP case, workers=1 with var rescaled to the J=1 scale agrees
+    alive = unbiased_gns_pair(var_l1, gsq, b, m, groups=m)
+    ref = unbiased_gns_pair(var_l1, gsq, b, m)
+    assert alive["valid"]
+    assert abs(alive["b_simple"] - ref["b_simple"]) < 1e-9
+    rescaled = unbiased_gns_pair(var_l1 / m, gsq, b, 1, groups=m)
+    assert abs(rescaled["b_simple"] - ref["b_simple"]) < 1e-9
+
+
+def test_unbiased_pair_clamps_degenerate_estimates():
+    # g2 <= 0 (noise swamps the mean gradient): clamped to 0.0, not inf/neg
+    est = unbiased_gns_pair(var_l1=100.0, grad_sqnorm=1e-12, global_batch=64,
+                            workers=8)
+    assert not est["valid"]
+    assert est["b_simple"] == 0.0
+    assert math.isfinite(est["b_simple"])
+    # one group: no two-scale signal at all
+    est = unbiased_gns_pair(4.0, 1.0, 64, 1)
+    assert not est["valid"] and est["b_simple"] == 0.0
+
+
+def test_tracker_skips_invalid_and_seeds_first_valid():
+    t = GNSTracker(alpha=0.5)
+    # invalid observations never touch the EMAs
+    t2 = t.update(var_l1=100.0, grad_sqnorm=1e-12, global_batch=64, workers=8)
+    assert t2 is t and not t2.initialized and t2.b_simple == 0.0
+    # the first VALID observation SEEDS (no blend against 0.0 placeholders)
+    t3 = t2.update(var_l1=4.0, grad_sqnorm=1.0, global_batch=64, workers=8)
+    pair = unbiased_gns_pair(4.0, 1.0, 64, 8)
+    assert t3.initialized
+    assert abs(t3.s_ema - pair["s"]) < 1e-12
+    assert abs(t3.g2_ema - pair["g2"]) < 1e-12
+    # subsequent observations BLEND
+    pair2 = unbiased_gns_pair(2.0, 1.0, 64, 8)
+    assert pair2["valid"]
+    t4 = t3.update(var_l1=2.0, grad_sqnorm=1.0, global_batch=64, workers=8)
+    assert abs(t4.s_ema - (0.5 * pair["s"] + 0.5 * pair2["s"])) < 1e-12
+
+
+# --------------------------------------------------------- prediction ----
+
+def test_critical_gns_levels():
+    # eta=0.12, J=1: the test can fire at 4..64 but never at 128
+    # (J <= eta^2 * b) — values from the DESIGN §14 derivation
+    assert abs(critical_gns_at(4, 0.12, 1) - 0.2445) < 1e-3
+    assert abs(critical_gns_at(32, 0.12, 1) - 27.347) < 1e-2
+    assert critical_gns_at(128, 0.12, 1) == float("inf")
+    # monotone in b on the crossable range
+    levels = [critical_gns_at(b, 0.12, 1) for b in (4, 8, 16, 32, 64)]
+    assert levels == sorted(levels)
+
+
+def test_rung_crossing_eta():
+    cross = critical_gns_at(8, 0.12, 1)
+    # already above the crossing level: fires now
+    assert rung_crossing_eta(cross + 1.0, 0.5, 8, 0.12, 1) == 0.0
+    # below with positive slope: linear ETA
+    eta = rung_crossing_eta(cross - 1.0, 0.5, 8, 0.12, 1)
+    assert abs(eta - 2.0) < 1e-9
+    # flat/shrinking GNS, or an uncrossable rung: -1.0 sentinel (JSON-safe)
+    assert rung_crossing_eta(cross - 1.0, 0.0, 8, 0.12, 1) == -1.0
+    assert rung_crossing_eta(1.0, 0.5, 128, 0.12, 1) == -1.0
+
+
+def test_predict_target_batch():
+    rungs = (4, 8, 16, 32, 64)
+    # low projected GNS: already stable at the current rung
+    assert predict_target_batch(0.1, 0.0, 5, 4, 0.12, 1, rungs) == 4
+    # projection above B_cross(4)≈0.24 but under B_cross(8)≈1.04 -> rung 8
+    assert predict_target_batch(0.5, 0.0, 5, 4, 0.12, 1, rungs) == 8
+    # growing: 0.5 + 5*0.5 = 3.0 sits between B_cross(8) and B_cross(16)
+    assert predict_target_batch(0.5, 0.5, 5, 4, 0.12, 1, rungs) == 16
+    # projection above every crossing level -> top rung
+    assert predict_target_batch(1e9, 0.0, 5, 4, 0.12, 1, rungs) == 64
+    # never predicts below the current rung
+    assert predict_target_batch(0.1, 0.0, 5, 16, 0.12, 1, rungs) == 16
+    # no ladder -> nothing to predict onto
+    assert predict_target_batch(0.5, 0.0, 5, 4, 0.12, 1, None) == 0

@@ -137,11 +137,12 @@ def _train_subprocess(kw, out_path, faults=None, expect_sigkill=False,
     return json.load(open(out_path))
 
 
-def _kill_and_resume(tmp_path, impl):
+def _kill_and_resume(tmp_path, impl, **over):
     """SIGKILL a run at step 6 (checkpoints every 2 -> last complete is 4),
-    resume it, and demand bit-identity with an uninterrupted reference."""
+    resume it, and demand bit-identity with an uninterrupted reference.
+    Returns the checkpoint dir (for metadata assertions)."""
     d = str(tmp_path / "ck")
-    kw = _job_kw(params_impl=impl, stats_impl=impl, eval_every=0)
+    kw = _job_kw(params_impl=impl, stats_impl=impl, eval_every=0, **over)
     ref = _train_subprocess(kw, tmp_path / "ref.json")
     victim = {**kw, "checkpoint_dir": d, "checkpoint_every": 2}
     _train_subprocess(victim, tmp_path / "victim.json",
@@ -151,10 +152,28 @@ def _kill_and_resume(tmp_path, impl):
     resumed = _train_subprocess({**victim, "resume": True},
                                 tmp_path / "resumed.json")
     _assert_suffix_identical(resumed, ref, 4)
+    return d
 
 
 def test_sigkill_mid_run_resume_bit_identity(tmp_path):
     _kill_and_resume(tmp_path, "tree")
+
+
+def test_sigkill_resume_bit_identity_with_predictor(tmp_path):
+    """The same acceptance bar with the predictive GNS companion ON: the
+    predictor state rides the checkpoint (populated gns_*/pred_* fields in
+    the controller metadata) and the resumed run stays bit-identical —
+    prediction observes the trajectory, never steers it.  base 32 of a
+    64-ladder: the two-scale estimate is only valid once M·J is large, so
+    the tracker provably initializes within the 8 steps."""
+    d = _kill_and_resume(tmp_path, "tree", base_global_batch=32,
+                         max_global_batch=64, predict=True, aot_warmup=True)
+    assert latest_step(d) == 8
+    ctrl = json.load(open(os.path.join(d, "ckpt_%08d.json" % 8)))["controller"]
+    assert ctrl["gns_init"], ctrl
+    assert ctrl["gns_g2"] > 0.0
+    assert ctrl["pred_rung"] == 64          # the rung it actually sits on
+    assert ctrl["pred_eta_steps"] == 0.0    # ...having already crossed
 
 
 @chaos

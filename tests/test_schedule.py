@@ -1,6 +1,6 @@
 from repro.core.schedule import (
-    BatchPlan, ConstantSchedule, StagewiseSchedule, quantize_to_ladder,
-    round_plan)
+    BatchPlan, ConstantSchedule, StagewiseSchedule, accum_free_plan,
+    quantize_to_ladder, round_plan)
 
 
 def test_constant():
@@ -24,6 +24,48 @@ def test_stagewise_boundaries():
 def _plan(gb, micro, accum, workers=1):
     return BatchPlan(global_batch=gb, micro_batch=micro, accum_steps=accum,
                      workers=workers)
+
+
+def test_stagewise_indivisible_stage_rounds_up_not_down():
+    """Regression: `round_plan(batch, ..., max_global=batch)` SHRANK a stage
+    whose prescribed size was not divisible by workers*micro_batch — the cap
+    clamped the rounded-up plan back below the stage (10 with J=4, mb=2
+    became 8 instead of the covering 16).  Stage plans must only round UP."""
+    s = StagewiseSchedule(((0.5, 10), (0.5, 24)), workers=4, micro_batch=2,
+                          max_micro_batch=2, base_accum=1)
+    p0 = s.plan_for(0, 100)
+    assert p0.global_batch >= 10, "stage size must never shrink"
+    assert p0.global_batch == 16          # ceil(10 / (4*2)) * (4*2)
+    p1 = s.plan_for(60, 100)
+    assert p1.global_batch == 24
+
+
+def test_stagewise_quantizes_onto_ladder():
+    """With a ladder, stagewise emits RUNG plans: an off-ladder stage plan
+    would die in the bucketed engine with LadderShapeError mid-training."""
+    ladder = (_plan(8, 2, 1, 4), _plan(16, 2, 2, 4), _plan(32, 2, 4, 4))
+    s = StagewiseSchedule(((0.5, 10), (0.5, 24)), workers=4, micro_batch=2,
+                          max_micro_batch=2, base_accum=1, ladder=ladder)
+    assert s.plan_for(0, 100) == ladder[1]     # 10 -> rounds up -> rung 16
+    assert s.plan_for(60, 100) == ladder[2]    # 24 -> rung 32
+    # a stage BELOW the ladder floor is NOT inflated to the floor rung: it
+    # runs padded into the floor bucket, consuming only the prescribed
+    # samples (the engine's standard sub-rung path)
+    s2 = StagewiseSchedule(((0.5, 4), (0.5, 24)), workers=4, micro_batch=1,
+                           max_micro_batch=2, base_accum=1, ladder=ladder)
+    assert s2.plan_for(0, 100).global_batch == 4
+
+
+def test_accum_free_plan():
+    plan = _plan(32, 2, 4, workers=4)
+    sub, repeats = accum_free_plan(plan)
+    assert sub == _plan(8, 2, 1, workers=4)
+    assert repeats == 4
+    # exact sample conservation — the DESIGN §14 equivalence claim's basis
+    assert sub.global_batch * repeats == plan.global_batch
+    # already accumulation-free: identity
+    sub1, rep1 = accum_free_plan(sub)
+    assert sub1 == sub and rep1 == 1
 
 
 def test_quantize_unsorted_ladder_finds_eligible_rungs():
