@@ -1,0 +1,110 @@
+"""Quantitative bench gate: fresh step times vs the committed trajectory.
+
+The repo commits BENCH_step.json (the per-step perf trajectory, refreshed
+by maintainers when perf intentionally changes); bench-smoke regenerates
+it every PR.  This module turns that pair into a PASS/FAIL: for every
+``step_per_bucket[impl][rung]`` present in the committed baseline, the
+fresh run's ``min_us`` must stay under ``multiplier x`` the committed
+``min_us``, and the (impl, rung) grid itself must not shrink — a rung
+that vanishes from the fresh run is a coverage regression, not a pass.
+
+``min_us`` is the comparison metric by design: the CI box shares cores,
+so mean/median carry contention noise, but the *minimum* over a run's
+samples is the noise floor — contention is strictly additive, so a real
+slowdown moves the floor while a noisy neighbour cannot.  The multiplier
+(``--gate-mult`` / ``$BENCH_GATE_MULT``, default 8.0) is deliberately
+generous for the same reason: this gate exists to catch order-of-magnitude
+regressions (an accidental recompile per step, a host sync in the hot
+loop), not single-digit percent drift — the static cost-model layer
+(`repro.analysis`) owns the fine-grained budget.
+
+CLI: ``python -m benchmarks.perf_gate FRESH BASELINE [--mult M]``, or via
+``python -m benchmarks.run --baseline BASELINE`` which gates the freshly
+merged --json-out after the benches finish.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_MULT = 8.0
+
+
+def gate_multiplier(cli_value=None) -> float:
+    """Precedence: explicit CLI value > $BENCH_GATE_MULT > default 8.0."""
+    if cli_value is not None:
+        return float(cli_value)
+    return float(os.environ.get("BENCH_GATE_MULT", DEFAULT_MULT))
+
+
+def compare_step_times(fresh: dict, baseline: dict, mult: float) -> list[str]:
+    """Failure messages for every (impl, rung) in the BASELINE grid whose
+    fresh ``min_us`` exceeds ``mult x`` baseline, or which the fresh run
+    dropped.  Extra fresh impls/rungs are fine (coverage can only grow);
+    an empty list means the gate passes."""
+    failures = []
+    base_grid = baseline.get("step_per_bucket")
+    if not isinstance(base_grid, dict) or not base_grid:
+        return ["baseline has no step_per_bucket grid (regenerate it with "
+                "`python -m benchmarks.run --only flat_stats`)"]
+    fresh_grid = fresh.get("step_per_bucket") or {}
+    for impl, rungs in sorted(base_grid.items()):
+        for rung, entry in sorted(rungs.items(), key=lambda kv: int(kv[0])):
+            want = entry.get("min_us")
+            if want is None:
+                continue
+            got_entry = fresh_grid.get(impl, {}).get(rung)
+            if got_entry is None:
+                failures.append(
+                    f"step_per_bucket[{impl}][{rung}]: missing from the "
+                    f"fresh run (baseline min_us={want}) — coverage shrank")
+                continue
+            got = got_entry["min_us"]
+            if got > mult * want:
+                failures.append(
+                    f"step_per_bucket[{impl}][{rung}]: fresh min_us={got} "
+                    f"> {mult:g}x baseline min_us={want} "
+                    f"({got / max(want, 1e-9):.1f}x)")
+    return failures
+
+
+def run_gate(fresh_path: str, baseline_path: str,
+             mult: float | None = None) -> list[str]:
+    """Load both JSONs, compare, print a verdict; returns the failures."""
+    mult = gate_multiplier(mult)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = compare_step_times(fresh, baseline, mult)
+    if failures:
+        print(f"perf gate FAIL ({len(failures)} regression(s), "
+              f"mult={mult:g}):", flush=True)
+        for msg in failures:
+            print(f"  - {msg}", flush=True)
+    else:
+        n = sum(len(r) for r in baseline.get("step_per_bucket", {}).values())
+        print(f"perf gate PASS ({n} (impl, rung) cells within "
+              f"{mult:g}x of baseline)", flush=True)
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.perf_gate",
+        description="gate fresh BENCH_step.json step times against the "
+                    "committed baseline")
+    ap.add_argument("fresh", help="freshly generated BENCH_step.json")
+    ap.add_argument("baseline", help="committed baseline BENCH_step.json")
+    ap.add_argument("--mult", type=float, default=None,
+                    help=f"regression multiplier (default $BENCH_GATE_MULT "
+                         f"or {DEFAULT_MULT})")
+    args = ap.parse_args(argv)
+    return 1 if run_gate(args.fresh, args.baseline, args.mult) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

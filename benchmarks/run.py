@@ -400,7 +400,7 @@ def _bench_step_per_bucket(nsteps):
       flat_resident — stats_impl=flat,  params_impl=flat (DESIGN §10:
                       gradients born flat, ZERO packs per step — its
                       pack_us is structurally 0, guarded by the tier-1
-                      `count_packs()` op-count test)
+                      `count_layout_ops` marker-eqn test)
 
     Each rung gets its own constant-batch FSDP-Norm step (the paper's
     primary distributed step, and the one where flat residency deletes the
@@ -735,6 +735,12 @@ def main(argv=None) -> None:
                         "existing top-level keys from other benches are "
                         "preserved (merge-update, so --only runs don't "
                         "clobber the rest of the trajectory)")
+    p.add_argument("--baseline", default=None,
+                   help="committed BENCH_step.json to gate the fresh "
+                        "step_per_bucket times against (perf_gate; exits 1 "
+                        "on a measured regression)")
+    p.add_argument("--gate-mult", type=float, default=None,
+                   help="gate multiplier (default $BENCH_GATE_MULT or 8.0)")
     args = p.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     if only and (unknown := only - set(BENCHES)):
@@ -756,6 +762,11 @@ def main(argv=None) -> None:
         with open(args.json_out, "w") as f:
             json.dump(merged, f, indent=2, sort_keys=True)
             f.write("\n")
+    if args.baseline:
+        # gate AFTER the merge so the comparison sees the full trajectory
+        from benchmarks.perf_gate import run_gate
+        if run_gate(args.json_out, args.baseline, args.gate_mult):
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,24 +1,39 @@
-"""repro.analysis — static invariant checker + determinism/perf lint
-(DESIGN §13).
+"""repro.analysis — static invariant checker, cost-model budget gate, and
+determinism/perf lint (DESIGN §13, §15).
 
-Two layers, both purely static:
+Three layers, all purely static (trace/lower — never execute):
 
-* **jaxpr layer** (`jaxpr_check`, `invariants`): trace — never execute —
-  every step variant in the stats×params residency matrix and assert the
-  step-graph invariants: exact pack/unflatten/adjoint marker-eqn counts,
-  donation actually aliased in the lowered HLO, bucket shardings matching
+* **jaxpr layer** (`jaxpr_check`, `invariants`): trace every step variant
+  in the stats×params residency matrix and assert the step-graph
+  invariants: exact pack/unflatten/adjoint marker-eqn counts, donation
+  actually aliased in the lowered HLO, bucket shardings matching
   `sharding.flat_buffer_specs`, no host callbacks in the hot path, and
   off-ladder batch shapes rejected before anything traces.
+* **cost layer** (`costmodel`, `divergence`): per-variant collective
+  volume (bytes + op counts per kind, attributed to flat bucket groups),
+  analytic FLOPs, and a peak-memory watermark from a liveness sweep with
+  donation credit — diffed against the committed `analysis_budget.json`
+  baseline with per-metric tolerances; plus the SPMD-divergence lint
+  (rank-independent collective order, cond branches agreeing on their
+  collective sequence).
 * **lint layer** (`lint`): AST rules over the repo's own source encoding
   its regression history (hash-seeded cache keys, wall-clock in traced
-  code, bare ``interpret=True``, set-order iteration, unfenced benchmark
-  timing, non-atomic durable writes), with inline
-  ``# repro: allow(<rule>) — <reason>`` waivers.
+  code, host-identity reads feeding traced code, bare ``interpret=True``,
+  set-order iteration, unfenced benchmark timing, non-atomic durable
+  writes), with inline ``# repro: allow(<rule>) — <reason>`` waivers.
 
-CLI: ``python -m repro.analysis [--strict] [--json]`` runs both and emits
-a machine-readable report; CI gates every PR on zero unwaived findings.
+CLI: ``python -m repro.analysis [--strict] [--json] [--update-budget]``
+runs all three and emits a machine-readable report; CI gates every PR on
+zero unwaived findings.
 """
 
+from repro.analysis.costmodel import (
+    DEFAULT_TOLERANCES, CollectiveSite, budget_diff, collective_profile,
+    collective_sites, flops_estimate, load_budget, measure_variants,
+    peak_memory, run_cost_checks, variant_cost, write_budget)
+from repro.analysis.divergence import (
+    branch_collective_mismatches, check_fn_divergence, collective_signature,
+    run_divergence_checks)
 from repro.analysis.findings import Finding, active, render_report, report_dict
 from repro.analysis.invariants import (
     EXPECTED_LAYOUT_COUNTS, LayoutCounts, build_variants,
@@ -29,10 +44,15 @@ from repro.analysis.jaxpr_check import (
 from repro.analysis.lint import lint_file, register_rule, rules, run_lint
 
 __all__ = [
-    "EXPECTED_LAYOUT_COUNTS", "Finding", "LayoutCounts", "active",
-    "build_variants", "check_ladder_rejection", "check_variant",
-    "count_layout_ops", "donation_effective", "find_host_eqns", "in_specs",
-    "iter_eqns", "lint_file", "main_arg_attrs", "register_rule",
-    "render_report", "report_dict", "rules", "run_invariant_checks",
-    "run_lint", "top_pjit_params", "trace",
+    "CollectiveSite", "DEFAULT_TOLERANCES", "EXPECTED_LAYOUT_COUNTS",
+    "Finding", "LayoutCounts", "active", "branch_collective_mismatches",
+    "budget_diff", "build_variants", "check_fn_divergence",
+    "check_ladder_rejection", "check_variant", "collective_profile",
+    "collective_signature", "collective_sites", "count_layout_ops",
+    "donation_effective", "find_host_eqns", "flops_estimate", "in_specs",
+    "iter_eqns", "lint_file", "load_budget", "main_arg_attrs",
+    "measure_variants", "peak_memory", "register_rule", "render_report",
+    "report_dict", "rules", "run_cost_checks", "run_divergence_checks",
+    "run_invariant_checks", "run_lint", "top_pjit_params", "trace",
+    "variant_cost", "write_budget",
 ]

@@ -1,8 +1,13 @@
 """CLI for the static analysis gate: ``python -m repro.analysis``.
 
-Runs both layers (AST lint sweep + trace-only step-matrix invariant check)
-and prints a report; ``--strict`` exits 1 on any unwaived finding (the CI
-static-analysis job), ``--json`` emits the machine-readable report.
+Runs all three layers — the AST determinism/perf lint, the trace-only
+step-matrix invariant check, and the cost-model + SPMD-divergence layer
+(collective volume / analytic FLOPs / peak-memory watermark diffed
+against the committed ``analysis_budget.json``) — and prints a report.
+``--strict`` exits 1 on any unwaived finding (the CI static-analysis
+job), ``--json`` emits the machine-readable report (the per-variant cost
+metrics ride in ``checked.cost``), and ``--update-budget`` refreezes the
+budget after an intentional cost change.
 """
 
 from __future__ import annotations
@@ -15,7 +20,8 @@ import sys
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="jaxpr-level invariant checker + determinism/perf lint")
+        description="jaxpr-level invariant checker + cost-model budget "
+                    "gate + determinism/perf lint")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on any unwaived finding (the CI gate)")
     ap.add_argument("--json", action="store_true",
@@ -23,9 +29,18 @@ def main(argv=None) -> int:
     ap.add_argument("--root", default=None,
                     help="repo root to lint (default: auto from this file)")
     ap.add_argument("--skip-lint", action="store_true",
-                    help="run only the jaxpr invariant matrix")
+                    help="skip the AST lint sweep")
     ap.add_argument("--skip-jaxpr", action="store_true",
-                    help="run only the AST lint sweep")
+                    help="skip the traced layers (invariants AND cost model)")
+    ap.add_argument("--skip-cost", action="store_true",
+                    help="skip layer 3 (cost model + divergence) only")
+    ap.add_argument("--budget", default=None,
+                    help="cost-budget baseline path (default: "
+                         "<root>/analysis_budget.json)")
+    ap.add_argument("--update-budget", action="store_true",
+                    help="refreeze analysis_budget.json from this run's "
+                         "measurements instead of diffing (the intentional-"
+                         "change flow; commit the result)")
     args = ap.parse_args(argv)
 
     from repro.analysis.findings import active, render_report
@@ -42,12 +57,26 @@ def main(argv=None) -> int:
             1 for sub in ("src", "benchmarks") if (root / sub).exists()
             for _ in (root / sub).rglob("*.py"))
     if not args.skip_jaxpr:
-        from repro.analysis.invariants import run_invariant_checks
+        from repro.analysis.invariants import build_variants, \
+            run_invariant_checks
         from repro.kernels.ops import flat_dispatch_info
-        jx, jx_checked = run_invariant_checks()
+        variants = build_variants()
+        jx, jx_checked = run_invariant_checks(variants=variants)
         findings.extend(jx)
         checked.update(jx_checked)
         checked["dispatch"] = flat_dispatch_info()
+        if not args.skip_cost:
+            from repro.analysis.costmodel import run_cost_checks
+            from repro.analysis.divergence import run_divergence_checks
+            budget = pathlib.Path(args.budget) if args.budget else \
+                root / "analysis_budget.json"
+            cost, cost_checked = run_cost_checks(
+                budget, variants=variants, update=args.update_budget)
+            findings.extend(cost)
+            checked["cost"] = cost_checked
+            div, div_checked = run_divergence_checks(variants)
+            findings.extend(div)
+            checked["divergence"] = div_checked
 
     print(render_report(findings, checked=checked, as_json=args.json))
     return 1 if (args.strict and active(findings)) else 0

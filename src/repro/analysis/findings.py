@@ -16,7 +16,7 @@ from dataclasses import asdict, dataclass
 @dataclass(frozen=True)
 class Finding:
     rule: str                       # e.g. "pack-count", "hash-seed"
-    layer: str                      # "jaxpr" | "lint"
+    layer: str                      # "jaxpr" | "lint" | "cost"
     location: str                   # "path:line" or a step-variant name
     message: str
     waived: bool = False
@@ -53,6 +53,15 @@ def render_report(findings, *, checked: dict | None = None,
         return json.dumps(report_dict(findings, checked=checked), indent=2,
                           sort_keys=True)
     lines = [f.render() for f in findings]
+    metrics = ((checked or {}).get("cost") or {}).get("metrics") or {}
+    for name in sorted(metrics):
+        m = metrics[name]
+        comm = sum(e["bytes"] for e in m["collectives"].values())
+        nops = sum(e["count"] for e in m["collectives"].values())
+        lines.append(
+            f"cost {name}: comm={comm}B/{nops}op "
+            f"(flatbuf {m['flatbuf']['bytes']}B) flops={m['flops']} "
+            f"peak={m['peak_bytes']}B aliased={m['donated_aliased']}")
     act = active(findings)
     lines.append(
         f"{len(act)} finding(s), {len(findings) - len(act)} waived")

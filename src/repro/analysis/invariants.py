@@ -48,9 +48,9 @@ class LayoutCounts:
 
 
 # The invariant catalog: layout op counts per (step, stats_impl, params_impl)
-# residency combo.  The `packs` column is the historical `count_packs()`
+# residency combo.  The `packs` column is the historical pack-count
 # regression matrix (tests/test_flatbuf.py); `unflattens`/`adjoints` are the
-# jaxpr-visible counts the Python-call proxy could never see.
+# jaxpr-visible counts the removed Python-call proxy could never see.
 EXPECTED_LAYOUT_COUNTS = {
     # FSDP-Norm, flat stats over tree params: packs g_j, mean g, and the
     # params (3) — the PR 3 regression packed g TWICE here (packs=4); one
@@ -83,6 +83,14 @@ EXPECTED_LAYOUT_COUNTS = {
     ("local_sgd", "tree", "tree"): LayoutCounts(0, 0, 0),
     ("local_sgd", "flat", "tree"): LayoutCounts(2, 0, 0),
     ("local_sgd", "flat", "flat"): LayoutCounts(0, 1, 1),
+    # accumulation-free M=1 sub-steps (DESIGN §14): the train loop slices
+    # one microbatch per optimizer step, so the engine sees (1, J·mb)
+    # leading dims — same step builders, same custom-vjp pair (the scan
+    # body is traced once regardless of M, so M=1 changes nothing the
+    # layout budget can see; what this guards is that it STAYS that way,
+    # since the accum-free regime was untraced before this entry).
+    ("fsdp_norm_m1", "flat", "flat"): LayoutCounts(0, 1, 1),
+    ("accum_norm_m1", "flat", "flat"): LayoutCounts(0, 1, 1),
     # serving decode: the KV cache is resident, nothing enters a layout.
     ("serve_decode", "-", "-"): LayoutCounts(0, 0, 0),
 }
@@ -101,6 +109,9 @@ class StepVariant:
     # (group label, declared specs, required specs) triples for flat bucket
     # groups that must match sharding.flat_buffer_specs
     flat_groups: list
+    # the builder's FlatLayout (None on tree paths) — layer 3 attributes
+    # collectives to bucket groups by matching operand sizes against it
+    layout: object = None
 
 
 # ------------------------------------------------------- variant builders ----
@@ -137,7 +148,7 @@ def build_variants(combos=None) -> list[StepVariant]:
     `EXPECTED_LAYOUT_COUNTS` keys (tests use this to keep one check
     fast)."""
     from repro.compat import set_mesh
-    from repro.core.schedule import BatchPlan
+    from repro.core.schedule import BatchPlan, accum_free_plan
     from repro.data.pipeline import MarkovTokens, make_batch
     from repro.distributed.local_step import make_local_sgd_step
     from repro.distributed.serve_step import make_slot_decode_step
@@ -153,6 +164,12 @@ def build_variants(combos=None) -> list[StepVariant]:
     src = MarkovTokens(vocab_size=cfg.vocab_size, seed=0)
     plan = BatchPlan(global_batch=4, micro_batch=2, accum_steps=2, workers=1)
     batch = _abstract(jax.tree.map(jnp.asarray, make_batch(src, 0, plan, 16)))
+    # the PR 9 accumulation-free regime: the SAME builders stepped at the
+    # M=1 sub-plan (leading dims (1, J·mb)), exactly what the train loop
+    # slices per optimizer step when `accum_free` engages
+    sub_plan, _ = accum_free_plan(plan)
+    batch_m1 = _abstract(jax.tree.map(jnp.asarray,
+                                      make_batch(src, 0, sub_plan, 16)))
     params_like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     wanted = set(combos) if combos is not None else None
     makers = {"fsdp_norm": make_fsdp_norm_step,
@@ -164,7 +181,9 @@ def build_variants(combos=None) -> list[StepVariant]:
         key = (step_impl, stats_impl, params_impl)
         if wanted is not None and key not in wanted:
             return
-        wrap, p_specs, o_specs = makers[step_impl](
+        accum_free = step_impl.endswith("_m1")
+        base_impl = step_impl[:-3] if accum_free else step_impl
+        wrap, p_specs, o_specs = makers[base_impl](
             model, AdamWConfig(), mesh, stats_impl=stats_impl,
             params_impl=params_impl, params_like=params_like)
         layout = wrap.flat_layout
@@ -184,7 +203,7 @@ def build_variants(combos=None) -> list[StepVariant]:
             # as H=accum_steps local steps — same leading-dims contract
             b_in = batch
         else:
-            b_in = batch
+            b_in = batch_m1 if accum_free else batch
         with set_mesh(mesh):
             fn = wrap(b_in)
         flat_groups = []
@@ -203,12 +222,14 @@ def build_variants(combos=None) -> list[StepVariant]:
             args=(p_in, opt, b_in, jax.ShapeDtypeStruct((), jnp.float32)),
             expected=EXPECTED_LAYOUT_COUNTS[key],
             spec_prefix=_spec_leaves((p_specs, o_specs)),
-            flat_groups=flat_groups))
+            flat_groups=flat_groups, layout=layout))
 
     for step_impl in ("fsdp_norm", "accum_norm"):
         for stats_impl in ("tree", "flat"):
             for params_impl in ("tree", "flat"):
                 add_train(step_impl, stats_impl, params_impl)
+    for step_impl in ("fsdp_norm_m1", "accum_norm_m1"):
+        add_train(step_impl, "flat", "flat")
     for stats_impl, params_impl in (("tree", "tree"), ("flat", "tree"),
                                     ("flat", "flat")):
         add_train("local_sgd", stats_impl, params_impl)
@@ -311,10 +332,12 @@ def check_ladder_rejection() -> list[Finding]:
     return findings
 
 
-def run_invariant_checks(combos=None) -> tuple[list[Finding], dict]:
+def run_invariant_checks(combos=None, variants=None) -> tuple[list[Finding], dict]:
     """The full trace-only matrix check.  Returns (findings, checked) where
-    `checked` records coverage for the report."""
-    variants = build_variants(combos)
+    `checked` records coverage for the report.  Pass prebuilt `variants`
+    to share one matrix build with the layer-3 checks (the CLI does)."""
+    if variants is None:
+        variants = build_variants(combos)
     findings = []
     for v in variants:
         findings.extend(check_variant(v))

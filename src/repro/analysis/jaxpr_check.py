@@ -5,8 +5,8 @@ Everything here operates on TRACED artifacts only — jaxprs from
 executed code.  The flat-buffer entry points bind a zero-cost marker
 primitive (`flatbuf.layout_marker_p`) on their buffers, so pack/unflatten/
 adjoint events are real equations these walkers can count *through* jit,
-scan, shard_map, and custom_vjp boundaries — unlike the deprecated
-`count_packs()` Python-call proxy, which only saw host-level calls.
+scan, shard_map, and custom_vjp boundaries — unlike the removed
+Python-call proxy (`count_packs`), which only saw host-level calls.
 """
 
 from __future__ import annotations

@@ -164,6 +164,33 @@ def _wallclock_traced(tree, src, relpath):
     return out
 
 
+_HOST_IDENTITY = {"jax.process_index", "process_index",
+                  "jax.process_count", "process_count",
+                  "jax.host_id", "host_id",
+                  "socket.gethostname", "platform.node",
+                  "os.getpid", "uuid.uuid4"}
+
+
+@register_rule("host-divergence", scope=_TRACED_SCOPE)
+def _host_divergence(tree, src, relpath):
+    """Host-identity reads (process index/count, hostname, pid, uuid4)
+    inside traced-scope code: a value that differs per rank feeding a
+    traced computation produces per-rank graphs — ranks then disagree on
+    collective order and deadlock (the SPMD-divergence class layer 3's
+    `divergence.py` checks dynamically; this is the lexical half).
+    Rank-dependent *data* belongs in collectives; rank-dependent
+    *structure* is always a bug."""
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _call_name(node) in _HOST_IDENTITY:
+            out.append((node.lineno,
+                        f"{_call_name(node)}() is a per-rank value in "
+                        f"traced-scope code; rank-dependent structure "
+                        f"desyncs SPMD programs — hoist it to the launch "
+                        f"layer or waive"))
+    return out
+
+
 @register_rule("bare-interpret",
                scope=lambda rel: rel != "src/repro/kernels/__init__.py")
 def _bare_interpret(tree, src, relpath):

@@ -445,6 +445,24 @@ class BucketedEngine(RungCache):
                 self._params_like, self._opt_like, _sds(batch_like),
                 jax.ShapeDtypeStruct((), jnp.float32))
 
+    def lower_step(self, batch_like):
+        """Lowered-HLO handle of the step at `batch_like`'s signature —
+        the layer-3 cost-model entry point (DESIGN §15).  Lowers but never
+        compiles, and like `trace_step` never touches the cache or stats;
+        the returned `jax.stages.Lowered` exposes `.as_text()` (donation
+        aliasing, shardings) and `.cost_analysis()` without ever loading
+        an executable.  Off-ladder shapes raise `LadderShapeError`."""
+        if self._params_like is None or self._opt_like is None:
+            raise ValueError(
+                "lower_step needs params_like/opt_like (the full abstract "
+                "step signature) — construct the engine with both")
+        self.check_on_ladder(batch_like)
+        fn = self._build(_sds(batch_like))
+        with self._mesh_ctx():
+            return fn.lower(
+                self._params_like, self._opt_like, _sds(batch_like),
+                jax.ShapeDtypeStruct((), jnp.float32))
+
     def check_on_ladder(self, batch_like):
         """Reject a batch whose leading (M, B) dims match no ladder rung —
         BEFORE the cache is keyed or anything traces, so an off-ladder

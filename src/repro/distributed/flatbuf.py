@@ -42,16 +42,11 @@ buffers, so the events survive into the jaxpr — visible *inside* jit,
 scan, shard_map, and custom_vjp — where `repro.analysis.jaxpr_check`
 counts them.  Tracing one flat train step must show the mean gradient
 packed exactly ONCE (the flat-tail double-pack regression guard).
-`count_packs()` is the deprecated Python-call predecessor: it only sees
-calls made at the Python level of the trace, not what jit retraces.
 """
 
 from __future__ import annotations
 
-import contextlib
 import math
-import threading
-import warnings
 from dataclasses import dataclass
 
 import jax
@@ -85,35 +80,6 @@ class Slot:
     offset: int
     size: int
     shape: tuple
-
-
-class _PackTrace(threading.local):
-    def __init__(self):
-        self.active: list | None = None
-
-
-_PACK_TRACE = _PackTrace()
-
-
-@contextlib.contextmanager
-def count_packs():
-    """DEPRECATED Python-call pack counter (one-release transition alias).
-
-    Records every `FlatLayout.flatten` call made in this thread while the
-    context is open; yields the list of per-call leaf counts.  Being a
-    host-side hook it cannot see inside an already-jitted callable — use
-    `repro.analysis.count_layout_ops`, which counts the `layout_marker_p`
-    eqns in the traced jaxpr instead (the same events, but visible through
-    jit / scan / shard_map boundaries)."""
-    warnings.warn(
-        "count_packs() is deprecated and will be removed next release; "
-        "use repro.analysis.count_layout_ops (jaxpr-eqn counting) instead",
-        DeprecationWarning, stacklevel=3)
-    prev, _PACK_TRACE.active = _PACK_TRACE.active, []
-    try:
-        yield _PACK_TRACE.active
-    finally:
-        _PACK_TRACE.active = prev
 
 
 # ------------------------------------------------ layout marker primitive ----
@@ -253,15 +219,13 @@ class FlatLayout:
         if len(leaves) != self.num_leaves:
             raise ValueError(
                 f"tree has {len(leaves)} leaves, layout expects {self.num_leaves}")
-        if _PACK_TRACE.active is not None:
-            _PACK_TRACE.active.append(self.num_leaves)
         return _mark(self._pack(leaves), "pack", self.num_leaves)
 
     def _pack(self, leaves):
         """Core packing (ravel + per-bucket concat + zero pad), shared by
-        `flatten` and the `unflatten_for_grad` adjoint.  NOT counted by
-        `count_packs()` — callers that enter the flat layout from a
-        materialized pytree go through `flatten`, which is."""
+        `flatten` and the `unflatten_for_grad` adjoint.  Binds no "pack"
+        marker itself — callers that enter the flat layout from a
+        materialized pytree go through `flatten`, which does."""
         parts: list = [[] for _ in range(self.num_buffers)]
         for slot, leaf in zip(self.slots, leaves):
             if tuple(leaf.shape) != slot.shape:
@@ -313,10 +277,10 @@ class FlatLayout:
         bit-identical to ``layout.flatten(jax.grad(loss)(tree))``.
 
         Takes (and differentiates w.r.t.) a tuple of buffers.  The
-        explicit adjoint is deliberately NOT counted by `count_packs()`:
-        it replaces the autodiff transpose inside the backward pass — the
-        per-step re-pack of a materialized gradient pytree is exactly the
-        cost flat residency deletes."""
+        explicit adjoint deliberately binds an "adjoint" marker, never a
+        "pack": it replaces the autodiff transpose inside the backward
+        pass — the per-step re-pack of a materialized gradient pytree is
+        exactly the cost flat residency deletes."""
         if self._unflat_grad is None:
             @jax.custom_vjp
             def unflat(bufs):
@@ -342,9 +306,9 @@ class FlatLayout:
         linear, so this IS its transpose for any cotangent; the train
         steps use it to transpose the whole accumulated gradient once per
         step without downcasting to the param dtype (which a dtype-strict
-        `jax.vjp` would force).  Like `unflatten_for_grad`'s VJP, this is
-        NOT counted by `count_packs()` — it is the autodiff transpose,
-        not a host-level re-entry into the layout."""
+        `jax.vjp` would force).  Like `unflatten_for_grad`'s VJP, it
+        binds an "adjoint" marker, never a "pack" — it is the autodiff
+        transpose, not a host-level re-entry into the layout."""
         leaves = jax.tree.leaves(ct_tree)
         if len(leaves) != self.num_leaves:
             raise ValueError(
@@ -403,6 +367,6 @@ class FlatParams:
         return cls(layout, buffers)
 
 
-__all__ = ["FlatLayout", "FlatParams", "Slot", "flatten_tree", "count_packs",
+__all__ = ["FlatLayout", "FlatParams", "Slot", "flatten_tree",
            "layout_marker_p", "default_bucket_bytes", "DEFAULT_BUCKET_BYTES",
            "CPU_BUCKET_BYTES"]

@@ -128,6 +128,7 @@ class FaultInjector:
             elif r.action == "die":
                 # a real unhandled death (no atexit, no finally blocks) —
                 # the same failure mode as a preempted/OOM-killed worker
+                # repro: allow(host-divergence) — kills its OWN process; the pid never feeds a traced computation
                 os.kill(os.getpid(), signal.SIGKILL)
             elif r.action == "truncate":
                 if path is None:

@@ -1,0 +1,19 @@
+"""Fixture: host-divergence violations (per-rank values in traced scope)."""
+
+import os
+
+import jax
+
+
+def rank_dependent_depth(x):
+    if jax.process_index() == 0:  # VIOLATION host-divergence
+        return x * 2
+    return x
+
+
+def pid_seeded(x):
+    return x + os.getpid()  # VIOLATION host-divergence
+
+
+def waived_rank_read():
+    return jax.process_count()  # repro: allow(host-divergence) — fixture

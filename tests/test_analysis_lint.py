@@ -30,6 +30,7 @@ def _lint(rel: str):
 FIXTURES = {
     "hash-seed": "src/repro/core/hash_cache.py",
     "wallclock-traced": "src/repro/kernels/clocked.py",
+    "host-divergence": "src/repro/models/rank_branch.py",
     "bare-interpret": "src/repro/kernels/pinned.py",
     "set-iter-order": "src/repro/core/set_order.py",
     "unfenced-timing": "benchmarks/leaky.py",
@@ -112,8 +113,9 @@ def test_waiver_regex_shapes():
 
 
 def test_rule_registry_covers_issue_catalog():
-    """All six DESIGN §13 rules are registered, each with a docstring (the
-    report/docs surface)."""
+    """Every lint rule (the six DESIGN §13 originals plus §15's
+    host-divergence) is registered, each with a docstring (the report/docs
+    surface)."""
     by_id = {r.id for r in rules()}
     assert by_id == set(FIXTURES)
     assert all(r.doc for r in rules())

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.norm_test import tree_sqdiff, tree_sqnorm
-from repro.distributed.flatbuf import FlatLayout, count_packs, flatten_tree
+from repro.distributed.flatbuf import FlatLayout, flatten_tree
 from repro.kernels import ops, ref, resolve_interpret
 from repro.optim.adamw import (
     AdamWConfig, init_adamw, init_adamw_flat, adamw_update, adamw_update_flat,
@@ -395,8 +395,8 @@ def test_step_pack_count(step_impl, stats_impl, params_impl, expected):
     nor a regression to re-packing born-flat gradients can recur).
 
     Counted from the traced jaxpr's `repro_layout_marker` eqns
-    (`repro.analysis.count_layout_ops`) — unlike the deprecated
-    `count_packs()` Python-call proxy, the eqn count holds THROUGH a jit
+    (`repro.analysis.count_layout_ops`) — unlike the removed
+    Python-call proxy, the eqn count holds THROUGH a jit
     boundary, so the same assertion also covers the jitted step (and the
     full stats×params×local-SGD matrix, including the unflatten/adjoint
     counts, is frozen in `analysis.invariants.EXPECTED_LAYOUT_COUNTS`)."""
@@ -424,18 +424,19 @@ def test_step_pack_count(step_impl, stats_impl, params_impl, expected):
         f"pack eqns per step (expected {expected}): {ops_seen}")
 
 
-def test_count_packs_deprecated_alias_still_counts():
-    """One-release transition: `count_packs()` still records host-level
-    flatten calls but warns DeprecationWarning pointing at the jaxpr
-    counter."""
-    import warnings
+def test_count_packs_alias_removed():
+    """The PR 8 one-release transition is over: the Python-call proxy is
+    gone from the module and its `__all__`; `count_layout_ops` (jaxpr-eqn
+    counting) is the only pack counter."""
+    import repro.distributed.flatbuf as fb
+    assert not hasattr(fb, "count_packs")
+    assert "count_packs" not in fb.__all__
     layout = FlatLayout.from_tree({"a": jnp.zeros((4,)), "b": jnp.zeros((2,))})
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        with count_packs() as packs:
-            layout.flatten({"a": jnp.zeros((4,)), "b": jnp.zeros((2,))})
-    assert packs == [2]
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    from repro.analysis import count_layout_ops
+    got = count_layout_ops(
+        lambda t: layout.flatten(t),
+        {"a": jnp.zeros((4,)), "b": jnp.zeros((2,))})
+    assert got["pack"] == [2]
 
 
 def test_layout_markers_visible_inside_jit():

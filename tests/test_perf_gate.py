@@ -1,0 +1,67 @@
+"""Bench gate (benchmarks/perf_gate.py): the committed-vs-fresh
+BENCH_step.json comparison that bench-smoke runs on every PR."""
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent))
+
+from benchmarks.perf_gate import (
+    DEFAULT_MULT, compare_step_times, gate_multiplier, run_gate)
+
+REPO = pathlib.Path(__file__).parent.parent
+
+
+def _grid(**cells):
+    return {"step_per_bucket": {
+        impl: {r: {"min_us": us} for r, us in rungs.items()}
+        for impl, rungs in cells.items()}}
+
+
+def test_identical_grids_pass():
+    base = _grid(flat={"4": 100.0, "8": 200.0}, tree={"4": 110.0})
+    assert compare_step_times(base, base, 8.0) == []
+
+
+def test_regression_fails_with_ratio_in_message():
+    base = _grid(flat={"4": 100.0})
+    fresh = _grid(flat={"4": 900.0})
+    fails = compare_step_times(fresh, base, 8.0)
+    assert len(fails) == 1 and "9.0x" in fails[0]
+    # under the multiplier: passes
+    assert compare_step_times(_grid(flat={"4": 799.0}), base, 8.0) == []
+
+
+def test_coverage_shrink_fails_but_growth_passes():
+    base = _grid(flat={"4": 100.0, "8": 200.0})
+    fresh = _grid(flat={"4": 100.0}, tree={"4": 90.0})   # dropped 8, added tree
+    fails = compare_step_times(fresh, base, 8.0)
+    assert len(fails) == 1 and "missing" in fails[0]
+
+
+def test_empty_baseline_is_a_failure_not_a_pass():
+    fails = compare_step_times(_grid(flat={"4": 1.0}), {}, 8.0)
+    assert fails and "step_per_bucket" in fails[0]
+
+
+def test_multiplier_precedence(monkeypatch):
+    monkeypatch.delenv("BENCH_GATE_MULT", raising=False)
+    assert gate_multiplier() == DEFAULT_MULT
+    monkeypatch.setenv("BENCH_GATE_MULT", "3.5")
+    assert gate_multiplier() == 3.5
+    assert gate_multiplier(2.0) == 2.0          # CLI beats env
+
+
+def test_committed_trajectory_self_gates(tmp_path, capsys):
+    """The committed BENCH_step.json passes against itself (what a
+    no-perf-change PR sees), and run_gate prints the verdict."""
+    committed = REPO / "BENCH_step.json"
+    assert committed.exists(), "BENCH_step.json must be committed"
+    grid = json.load(open(committed)).get("step_per_bucket")
+    assert grid, "committed trajectory must carry step_per_bucket"
+    for impl in ("tree", "flat", "flat_resident"):
+        assert impl in grid and grid[impl], impl
+        assert all("min_us" in e for e in grid[impl].values())
+    assert run_gate(str(committed), str(committed)) == []
+    assert "perf gate PASS" in capsys.readouterr().out
